@@ -1,0 +1,68 @@
+"""Fig. 2: GW estimation error (vs PGA-GW benchmark) and CPU time vs n,
+on Moon and Graph, for l1 and l2 ground costs.
+
+Methods: EGW, PGA-GW (benchmark), SaGroW, SPAR-GW (paper), Grid-SPAR-GW
+(beyond-paper TPU-native variant). s = 16 n, s' = s²/n² (equal budget),
+estimates averaged over runs — the paper's protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FULL, record, timed
+from benchmarks.datasets import DATASETS
+from repro.core import egw, grid_spar_gw, pga_gw, sagrow, spar_gw
+
+
+def run(dataset: str = "moon", losses=("l2", "l1"), ns=None, reps: int = 3,
+        R: int = 10, H: int = 30):
+    ns = ns or ([100, 200, 500] if FULL else [60, 120])
+    results = []
+    for loss in losses:
+        for n in ns:
+            a, b, Cx, Cy = DATASETS[dataset](n)
+            a, b = jnp.asarray(a), jnp.asarray(b)
+            Cx, Cy = jnp.asarray(Cx), jnp.asarray(Cy)
+            kw = dict(loss=loss, epsilon=1e-2, outer_iters=R, inner_iters=H)
+
+            t_ref, (ref, _) = timed(lambda: pga_gw(a, b, Cx, Cy, **kw))
+            record(f"fig2/{dataset}/{loss}/n{n}/pga_gw", t_ref * 1e6,
+                   f"value={float(ref):.5f}")
+
+            t_e, (v_e, _) = timed(lambda: egw(a, b, Cx, Cy, **kw))
+            record(f"fig2/{dataset}/{loss}/n{n}/egw", t_e * 1e6,
+                   f"err={abs(float(v_e) - float(ref)):.5f}")
+
+            s = 16 * n
+            for name, fn in [
+                ("spar_gw", lambda k: spar_gw(k, a, b, Cx, Cy, s=s, **kw)),
+                ("grid_spar_gw", lambda k: grid_spar_gw(
+                    k, a, b, Cx, Cy, s_r=int(np.sqrt(s)), s_c=int(np.sqrt(s)),
+                    **kw)),
+                ("sagrow", lambda k: sagrow(k, a, b, Cx, Cy,
+                                            s_prime=max(s * s // (n * n), 16),
+                                            **kw)),
+            ]:
+                vals, t_acc = [], 0.0
+                for r in range(reps):
+                    t, (v, _) = timed(fn, jax.random.PRNGKey(r),
+                                      warmup=(r == 0))
+                    vals.append(float(v))
+                    t_acc += t
+                err = abs(np.mean(vals) - float(ref))
+                record(f"fig2/{dataset}/{loss}/n{n}/{name}",
+                       t_acc / reps * 1e6,
+                       f"err={err:.5f};std={np.std(vals):.5f}")
+                results.append((dataset, loss, n, name, err, t_acc / reps))
+    return results
+
+
+def main():
+    run("moon")
+    run("graph")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig. 5 (appendix C.1) + Table 1: Gaussian/Spiral datasets — error, CPU
+time, live-buffer memory vs n, and empirical complexity slopes.
+
+The paper's headline: SPAR-GW scales ~O(n² + s²) while EGW-family baselines
+scale ~O(n³) (decomposable) / O(n⁴) (general); all methods are O(n²) memory.
+We fit log-log slopes of measured runtimes as the empirical check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FULL, live_device_bytes, record, timed
+from benchmarks.datasets import DATASETS
+from repro.core import pga_gw, spar_gw
+
+
+def run(dataset: str):
+    ns = [64, 128, 256, 512] if FULL else [48, 96, 192]
+    times = {"pga_gw": [], "spar_gw": []}
+    for n in ns:
+        a, b, Cx, Cy = DATASETS[dataset](n)
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        Cx, Cy = jnp.asarray(Cx), jnp.asarray(Cy)
+        kw = dict(loss="l2", epsilon=1e-2, outer_iters=10, inner_iters=30)
+        t_ref, (ref, _) = timed(lambda: pga_gw(a, b, Cx, Cy, **kw))
+        mem = live_device_bytes()
+        record(f"fig5/{dataset}/n{n}/pga_gw", t_ref * 1e6,
+               f"value={float(ref):.5f};live_bytes={mem}")
+        times["pga_gw"].append(t_ref)
+        t_s, (v, _) = timed(
+            lambda: spar_gw(jax.random.PRNGKey(0), a, b, Cx, Cy, s=16 * n,
+                            **kw))
+        mem = live_device_bytes()
+        record(f"fig5/{dataset}/n{n}/spar_gw", t_s * 1e6,
+               f"err={abs(float(v) - float(ref)):.5f};live_bytes={mem}")
+        times["spar_gw"].append(t_s)
+    for name, ts in times.items():
+        slope = np.polyfit(np.log(ns), np.log(ts), 1)[0]
+        record(f"fig5/{dataset}/slope/{name}", 0.0, f"loglog_slope={slope:.2f}")
+
+
+def main():
+    run("gaussian")
+    run("spiral")
+
+
+if __name__ == "__main__":
+    main()

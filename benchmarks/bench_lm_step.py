@@ -1,0 +1,50 @@
+"""LM substrate microbench: train_step / decode_step wall time for reduced
+configs on CPU (1 device) — regression tracking for the framework layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FULL, record, timed
+from repro.configs import base as cb
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+ARCHS = cb.ARCH_IDS if FULL else ("smollm_135m", "phi3_5_moe_42b_a6_6b",
+                                  "xlstm_125m", "zamba2_7b")
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ARCHS:
+        cfg = cb.get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(key)
+        opt = adamw.init(params)
+        B, S = 4, 64
+        if cfg.n_codebooks > 1:
+            toks = jax.random.randint(key, (B, S + 1, cfg.n_codebooks), 0,
+                                      cfg.vocab_size)
+        else:
+            toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.random.normal(
+                key, (B, cfg.n_image_tokens, cfg.d_model))
+        step = jax.jit(make_train_step(model, act_dtype=jnp.float32,
+                                       remat=False, total_steps=10))
+        t, _ = timed(lambda: step(params, opt, batch), reps=3)
+        record(f"lm_step/{arch}/train", t * 1e6, f"tokens={B*S}")
+
+        cache = model.init_cache(B, S, dtype=jnp.float32)
+        dec = jax.jit(lambda p, tk, c, i: model.decode_step(
+            p, tk, c, i, act_dtype=jnp.float32,
+            img=batch.get("image_embeds")))
+        tok1 = batch["tokens"][:, :1]
+        t, _ = timed(lambda: dec(params, tok1, cache, jnp.int32(0)), reps=5)
+        record(f"lm_step/{arch}/decode", t * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

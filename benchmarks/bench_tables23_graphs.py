@@ -1,0 +1,136 @@
+"""Tables 2-3: graph clustering (Rand index) and classification (accuracy)
+from pairwise SPAR-GW distances.
+
+Offline substitution (DESIGN.md §8): TU datasets / PyG / sklearn are not
+available, so we generate a 3-class synthetic corpus (SBM 2-block, SBM
+3-block, Barabási–Albert) with identical protocol shape: pairwise (F)GW
+distance matrix D -> similarity S = exp(-D/γ) -> spectral clustering (own
+eigh+k-means) for RI, kernel-ridge one-vs-rest for accuracy.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+from scipy.linalg import eigh
+
+from benchmarks.common import FULL, record, timed
+from repro.core import spar_gw
+
+
+# ---------------------------------------------------------------------------
+# corpus
+# ---------------------------------------------------------------------------
+
+def make_corpus(n_per_class: int, n_nodes: int, seed: int = 0):
+    graphs, labels = [], []
+    rng = np.random.default_rng(seed)
+    for i in range(n_per_class):
+        g = nx.stochastic_block_model(
+            [n_nodes // 2, n_nodes - n_nodes // 2], [[0.6, 0.05], [0.05, 0.6]],
+            seed=int(rng.integers(1e6)))
+        graphs.append(g); labels.append(0)
+        sizes = [n_nodes // 3, n_nodes // 3, n_nodes - 2 * (n_nodes // 3)]
+        p = [[0.7, 0.05, 0.05], [0.05, 0.7, 0.05], [0.05, 0.05, 0.7]]
+        g = nx.stochastic_block_model(sizes, p, seed=int(rng.integers(1e6)))
+        graphs.append(g); labels.append(1)
+        g = nx.barabasi_albert_graph(n_nodes, 3, seed=int(rng.integers(1e6)))
+        graphs.append(g); labels.append(2)
+    return graphs, np.array(labels)
+
+
+def graph_repr(g):
+    A = nx.to_numpy_array(g).astype(np.float32)
+    d = A.sum(1) + 1e-9
+    return jnp.asarray(A), jnp.asarray(d / d.sum(), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# own spectral clustering + kernel ridge (sklearn unavailable offline)
+# ---------------------------------------------------------------------------
+
+def kmeans(X, k, iters=50, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = X[rng.choice(len(X), k, replace=False)]
+    for _ in range(iters):
+        d = ((X[:, None] - centers[None]) ** 2).sum(-1)
+        assign = d.argmin(1)
+        for j in range(k):
+            if (assign == j).any():
+                centers[j] = X[assign == j].mean(0)
+    return assign
+
+
+def spectral_clustering(S, k, seed=0):
+    d = S.sum(1)
+    Dm = np.diag(1.0 / np.sqrt(d + 1e-12))
+    L = np.eye(len(S)) - Dm @ S @ Dm
+    w, v = eigh(L)
+    emb = v[:, :k]
+    emb = emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-12)
+    return kmeans(emb, k, seed=seed)
+
+
+def rand_index(y_true, y_pred):
+    n = len(y_true)
+    same_t = y_true[:, None] == y_true[None, :]
+    same_p = y_pred[:, None] == y_pred[None, :]
+    agree = (same_t == same_p).sum() - n
+    return agree / (n * (n - 1))
+
+
+def kernel_ridge_cv(S, y, n_classes, folds=5, lam=1e-3, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(y))
+    accs = []
+    for f in range(folds):
+        test = idx[f::folds]
+        train = np.setdiff1d(idx, test)
+        K_tr = S[np.ix_(train, train)]
+        Y = np.eye(n_classes)[y[train]]
+        alpha = np.linalg.solve(K_tr + lam * np.eye(len(train)), Y)
+        pred = S[np.ix_(test, train)] @ alpha
+        accs.append((pred.argmax(1) == y[test]).mean())
+    return float(np.mean(accs))
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    n_per = 8 if FULL else 4
+    n_nodes = 30
+    graphs, labels = make_corpus(n_per, n_nodes)
+    reprs = [graph_repr(g) for g in graphs]
+    N = len(graphs)
+    s = 8 * n_nodes
+
+    for loss in (("l1", "l2") if FULL else ("l1",)):
+        import time
+        t0 = time.time()
+        D = np.zeros((N, N))
+        key = jax.random.PRNGKey(0)
+        for i, j in itertools.combinations(range(N), 2):
+            Ai, ai = reprs[i]
+            Aj, aj = reprs[j]
+            v, _ = spar_gw(jax.random.fold_in(key, i * N + j), ai, aj, Ai, Aj,
+                           s=s, loss=loss, epsilon=1e-2, outer_iters=8,
+                           inner_iters=20)
+            D[i, j] = D[j, i] = max(float(v), 0.0)
+        dt = time.time() - t0
+        best_ri, best_acc = 0.0, 0.0
+        for gamma in (np.median(D[D > 0]) * g for g in (0.25, 0.5, 1.0, 2.0)):
+            S = np.exp(-D / gamma)
+            pred = spectral_clustering(S, 3)
+            best_ri = max(best_ri, rand_index(labels, pred))
+            best_acc = max(best_acc, kernel_ridge_cv(S, labels, 3))
+        record(f"tables23/{loss}/rand_index", dt / (N * (N - 1) / 2) * 1e6,
+               f"RI={best_ri:.4f}")
+        record(f"tables23/{loss}/accuracy", dt / (N * (N - 1) / 2) * 1e6,
+               f"acc={best_acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Shared benchmark harness utilities. CSV contract: name,us_per_call,derived."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+FULL = bool(os.environ.get("REPRO_BENCH_FULL"))
+
+_rows = []
+
+
+def record(name: str, us_per_call: float, derived: str = ""):
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rows():
+    return list(_rows)
+
+
+def timed(fn, *args, reps: int = 1, warmup: bool = True):
+    """Wall-time fn; blocks on jax outputs. Returns (seconds, last_result)."""
+    if warmup:
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps, out
+
+
+def live_device_bytes() -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.live_arrays())

@@ -1,0 +1,94 @@
+"""Synthetic datasets exactly following the paper's experimental setup
+(§6.1, appendix C): Moon, Graph, Gaussian, Spiral."""
+from __future__ import annotations
+
+import numpy as np
+import networkx as nx
+
+
+def gaussian_weights(n: int, mean_frac: float, std_frac: float, rng):
+    """Marginals ~ N(n*frac, n*std_frac) over point indices (paper: Moon
+    uses N(n/3, n/20) and N(n/2, n/20))."""
+    idx = np.arange(n)
+    w = np.exp(-0.5 * ((idx - mean_frac * n) / (std_frac * n)) ** 2) + 1e-9
+    return (w / w.sum()).astype(np.float32)
+
+
+def _pairwise(x):
+    d = np.sqrt(((x[:, None] - x[None, :]) ** 2).sum(-1))
+    return d.astype(np.float32)
+
+
+def make_moons_points(n, rng, noise=0.05):
+    """Two interleaving half circles (sklearn.make_moons equivalent)."""
+    n1 = n // 2
+    n2 = n - n1
+    t1 = np.pi * rng.random(n1)
+    t2 = np.pi * rng.random(n2)
+    outer = np.stack([np.cos(t1), np.sin(t1)], 1)
+    inner = np.stack([1 - np.cos(t2), 0.5 - np.sin(t2)], 1)
+    pts = np.concatenate([outer, inner], 0)
+    return pts + noise * rng.standard_normal(pts.shape)
+
+
+def moon(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = make_moons_points(n, rng)
+    y = make_moons_points(n, np.random.default_rng(seed + 1))
+    a = gaussian_weights(n, 1 / 3, 1 / 20, rng)
+    b = gaussian_weights(n, 1 / 2, 1 / 20, rng)
+    return a, b, _pairwise(x), _pairwise(y)
+
+
+def graph(n: int, seed: int = 0, extra_p: float = 0.2):
+    """Power-law graph; second graph adds random extra edges w.p. 0.2;
+    marginals = degree distributions; relations = adjacency (paper §6.1)."""
+    g1 = nx.barabasi_albert_graph(n, 3, seed=seed)
+    A1 = nx.to_numpy_array(g1)
+    rng = np.random.default_rng(seed)
+    extra = (rng.random((n, n)) < extra_p).astype(float)
+    extra = np.triu(extra, 1)
+    A2 = np.clip(A1 + extra + extra.T, 0, 1)
+    d1 = A1.sum(1) + 1e-9
+    d2 = A2.sum(1) + 1e-9
+    return ((d1 / d1.sum()).astype(np.float32),
+            (d2 / d2.sum()).astype(np.float32),
+            A1.astype(np.float32), A2.astype(np.float32))
+
+
+def gaussian_mixture(n: int, seed: int = 0):
+    """Source: 3-component mixture in R^5; target: 2-component in R^10
+    (appendix C.1, heterogeneous spaces)."""
+    rng = np.random.default_rng(seed)
+    cov_s = 0.6 ** np.abs(np.subtract.outer(np.arange(5), np.arange(5)))
+    mus = [np.zeros(5), np.ones(5), np.array([0, 2, 2, 0, 0.0])]
+    comp = rng.integers(0, 3, n)
+    xs = np.stack([rng.multivariate_normal(mus[c], cov_s) for c in comp])
+    mut = [0.5 * np.ones(10), 2 * np.ones(10)]
+    comp_t = rng.integers(0, 2, n)
+    xt = np.stack([rng.multivariate_normal(mut[c], np.eye(10))
+                   for c in comp_t])
+    a = gaussian_weights(n, 1 / 3, 1 / 20, rng)
+    b = gaussian_weights(n, 1 / 2, 1 / 20, rng)
+    return a, b, _pairwise(xs), _pairwise(xt)
+
+
+def spiral(n: int, seed: int = 0):
+    """Two noisy spirals, the second rotated pi/4 + translated (appendix C.1)."""
+    rng = np.random.default_rng(seed)
+    r = rng.random(n)
+    u = rng.random(n)
+    u2 = rng.random(n)
+    ang = 3 * np.pi * np.sqrt(r)
+    xs = np.stack([-ang * np.cos(ang) + u, ang * np.sin(ang) + u2], 1) \
+        - np.array([10.0, 10.0])
+    th = np.pi / 4
+    R = np.array([[np.cos(th), -np.sin(th)], [np.sin(th), np.cos(th)]])
+    xt = xs @ R.T + 2 * np.array([10.0, 10.0])
+    a = gaussian_weights(n, 1 / 3, 1 / 20, rng)
+    b = gaussian_weights(n, 1 / 2, 1 / 20, rng)
+    return a, b, _pairwise(xs), _pairwise(xt)
+
+
+DATASETS = {"moon": moon, "graph": graph, "gaussian": gaussian_mixture,
+            "spiral": spiral}

@@ -1,0 +1,105 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+  compute term    = FLOPs_per_device / peak_FLOP/s        (197 TF bf16, v5e)
+  memory term     = bytes_per_device / HBM_bw             (819 GB/s)
+  collective term = wire_bytes_per_device / ICI_bw        (50 GB/s/link;
+                    HLO is the per-device program, so per-device wire bytes
+                    over per-chip link bw == global_bytes/(chips·link_bw))
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd) vs compiled FLOPs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(rec) -> float:
+    """6·N·D for train, 2·N·D forward-only (decode: D = batch tokens)."""
+    if rec["kind"] == "gw" or rec["shape"] not in SHAPE_TOKENS:
+        return 0.0
+    n = rec["n_params"]
+    toks = SHAPE_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    # MoE: active params only
+    arch = rec["arch"]
+    active_frac = 1.0
+    if "llama4-scout" in arch:
+        active_frac = (1 + 2) / 17.0 * 1.7      # ~2 of 17B active (top1+shared)
+    if "phi3.5-moe" in arch:
+        active_frac = 6.6 / 42.0
+    return mult * n * active_frac * toks
+
+
+def load_cells(mesh: str = None, tag: str = ""):
+    cells = []
+    for p in sorted(ART.glob("*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def analyze(rec):
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    wire = sum(v["wire_bytes"] for v in rec["collectives"].values())
+    t_coll = wire / ICI_BW
+    dom = max((("compute", t_comp), ("memory", t_mem),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec)
+    hlo_global = rec["flops_per_device"] * chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    bound = max(t_comp, t_mem, t_coll)
+    frac = t_comp / bound if bound else 0.0   # roofline fraction (compute/limit)
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": ratio, "roofline_fraction": frac,
+            "temp_GiB": rec["memory"]["temp_bytes"] / 2**30,
+            "args_GiB": rec["memory"]["argument_bytes"] / 2**30}
+
+
+def table(mesh="single", tag=""):
+    rows = [analyze(r) for r in load_cells(mesh, tag)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = table(mesh)
+        if not rows:
+            continue
+        print(f"\n=== mesh: {mesh} ===")
+        hdr = (f"{'arch':26s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+               f"{'coll(s)':>9s} {'dominant':>10s} {'6ND/HLO':>8s} "
+               f"{'frac':>6s} {'temp':>7s}")
+        print(hdr)
+        for r in rows:
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+                  f"{r['t_collective_s']:9.2e} {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:8.2f} {r['roofline_fraction']:6.2f} "
+                  f"{r['temp_GiB']:6.1f}G")
+
+
+if __name__ == "__main__":
+    main()

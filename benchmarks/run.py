@@ -1,0 +1,44 @@
+"""Benchmark runner — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (harness contract). Set
+REPRO_BENCH_FULL=1 for paper-scale sizes."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_fig2,
+        bench_fig3_ugw,
+        bench_fig4_sensitivity,
+        bench_fig5_scaling,
+        bench_fig6_fgw,
+        bench_grid_vs_coo,
+        bench_lm_step,
+        bench_tables23_graphs,
+    )
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (bench_fig2, bench_fig3_ugw, bench_fig4_sensitivity,
+                bench_fig5_scaling, bench_fig6_fgw, bench_grid_vs_coo,
+                bench_tables23_graphs, bench_lm_step):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(mod.__name__)
+    # roofline table (reads dry-run artifacts if present)
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append("roofline")
+    if failures:
+        print("FAILED:", failures, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

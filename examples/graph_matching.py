@@ -1,0 +1,41 @@
+"""Graph analysis with SPAR-GW (paper §6.2): pairwise GW distances between
+graphs -> similarity matrix -> spectral clustering.
+
+Run:  PYTHONPATH=src python examples/graph_matching.py
+"""
+import sys
+sys.path.insert(0, ".")
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+
+from benchmarks.bench_tables23_graphs import (
+    graph_repr,
+    make_corpus,
+    rand_index,
+    spectral_clustering,
+)
+from repro.core import spar_gw
+
+graphs, labels = make_corpus(n_per_class=4, n_nodes=30)
+reprs = [graph_repr(g) for g in graphs]
+N = len(graphs)
+print(f"{N} graphs, 3 families (SBM-2, SBM-3, Barabási–Albert)")
+
+D = np.zeros((N, N))
+for i, j in itertools.combinations(range(N), 2):
+    Ai, ai = reprs[i]
+    Aj, aj = reprs[j]
+    v, _ = spar_gw(jax.random.PRNGKey(i * N + j), ai, aj, Ai, Aj,
+                   s=8 * 30, loss="l1", epsilon=1e-2, outer_iters=8,
+                   inner_iters=20)
+    D[i, j] = D[j, i] = max(float(v), 0.0)
+
+gamma = np.median(D[D > 0])
+S = np.exp(-D / gamma)
+pred = spectral_clustering(S, 3)
+print(f"Rand index vs true families: {rand_index(labels, pred):.3f}")

@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    CLI_ALIASES,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    get_arch,
+    get_reduced,
+    shapes_for,
+)
+from repro.configs.paper import DEFAULT as DEFAULT_GW_CONFIG
+from repro.configs.paper import GWSolverConfig

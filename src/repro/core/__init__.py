@@ -1,0 +1,14 @@
+"""The paper's contribution: importance-sparsified GW distances in JAX."""
+from repro.core.align import gw_alignment_loss
+from repro.core.grid_gw import grid_cost, grid_spar_gw
+from repro.core.gw import dense_cost, egw, gw_dense, gw_objective, pga_gw
+from repro.core.sagrow import sagrow
+from repro.core.sinkhorn import (
+    sinkhorn,
+    sinkhorn_log,
+    sinkhorn_unbalanced,
+    sparse_sinkhorn,
+    sparse_sinkhorn_unbalanced,
+)
+from repro.core.spar_gw import spar_cost, spar_fgw, spar_gw
+from repro.core.spar_ugw import spar_ugw, ugw_dense

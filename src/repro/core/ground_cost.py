@@ -1,0 +1,61 @@
+"""Ground cost functions L(x, y) and their decomposable forms.
+
+A cost is *decomposable* (Peyré et al., 2016) when
+``L(x, y) = f1(x) + f2(y) - h1(x) h2(y)``, which enables the O(n^2 m + m^2 n)
+dense cost-assembly path and the two-matmul grid path. ``l1`` is the
+paper's canonical *indecomposable* cost.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+_KL_EPS = 1e-10
+
+
+def l1(x, y):
+    return jnp.abs(x - y)
+
+
+def l2(x, y):
+    return (x - y) ** 2
+
+
+def kl(x, y):
+    xs = jnp.maximum(x, _KL_EPS)
+    ys = jnp.maximum(y, _KL_EPS)
+    return x * (jnp.log(xs) - jnp.log(ys)) - x + y
+
+
+class Decomposition(NamedTuple):
+    f1: Callable
+    f2: Callable
+    h1: Callable
+    h2: Callable
+
+
+LOSSES = {"l1": l1, "l2": l2, "kl": kl}
+
+DECOMPOSITIONS: dict[str, Optional[Decomposition]] = {
+    "l1": None,
+    # (x-y)^2 = x^2 + y^2 - x * 2y
+    "l2": Decomposition(
+        f1=lambda x: x**2, f2=lambda y: y**2, h1=lambda x: x, h2=lambda y: 2.0 * y
+    ),
+    # x log(x/y) - x + y = (x log x - x) + y - x log y
+    "kl": Decomposition(
+        f1=lambda x: x * jnp.log(jnp.maximum(x, _KL_EPS)) - x,
+        f2=lambda y: y,
+        h1=lambda x: x,
+        h2=lambda y: jnp.log(jnp.maximum(y, _KL_EPS)),
+    ),
+}
+
+
+def get_loss(name: str) -> Callable:
+    return LOSSES[name]
+
+
+def get_decomposition(name: str) -> Optional[Decomposition]:
+    return DECOMPOSITIONS.get(name)

@@ -1,0 +1,48 @@
+"""Small shared utilities for the GW core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def safe_div(num, den):
+    """num / den with 0 where den == 0 (dead Sinkhorn rows/cols)."""
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def chunked_rows(fn, n_rows: int, chunk: int):
+    """Apply ``fn(start_index, chunk_size)`` over row chunks, concat results.
+
+    ``n_rows`` and ``chunk`` are static; the last chunk is padded by fn's
+    caller convention (we only use exact divisors or mask inside fn).
+    """
+    import numpy as np
+
+    chunk = min(chunk, n_rows)
+    n_chunks = -(-n_rows // chunk)
+    outs = []
+    for c in range(n_chunks):
+        lo = c * chunk
+        size = min(chunk, n_rows - lo)
+        outs.append(fn(lo, size))
+    return jnp.concatenate(outs, axis=0)
+
+
+def total_mass(x) -> jnp.ndarray:
+    return jnp.sum(x)
+
+
+def generalized_kl(p, q):
+    """KL(p || q) = sum p log(p/q) - m(p) + m(q) for nonnegative vectors."""
+    eps = 1e-30
+    p_ = jnp.maximum(p, eps)
+    q_ = jnp.maximum(q, eps)
+    return jnp.sum(p * (jnp.log(p_) - jnp.log(q_))) - jnp.sum(p) + jnp.sum(q)
+
+
+def quadratic_kl(p, q):
+    """KL^tensor(p||q) = KL(p (x) p || q (x) q) (Séjourné et al., 2021)."""
+    mp, mq = jnp.sum(p), jnp.sum(q)
+    eps = 1e-30
+    cross = jnp.sum(p * (jnp.log(jnp.maximum(p, eps)) - jnp.log(jnp.maximum(q, eps))))
+    return 2.0 * mp * cross - mp**2 + mq**2

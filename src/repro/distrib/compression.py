@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the DCN all-reduce dominates; int8 block-quantized
+gradient all-reduce cuts wire bytes 4x vs f32 (2x vs bf16) at bounded
+relative error (tested). Used under ``shard_map`` where the DP reduction is
+explicit; under plain jit-SPMD the reduction is XLA-implicit, so the
+trainer exposes ``--grad-compression`` which switches the DP axis handling
+to the shard_map path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def quantize_int8(x):
+    """Block-wise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-quantize -> all-gather(q, scales) -> local dequant-sum, inside
+    shard_map. Wire payload is int8 + one f32 scale per 256-block: ~4x less
+    traffic than an f32 ring all-reduce. Per-shard error is bounded by its
+    own block max / 127 (each shard's contribution uses its own scale).
+    """
+    q, scale = quantize_int8(x)
+    q_all = jax.lax.all_gather(q, axis_name)          # (n, blocks, 256)
+    s_all = jax.lax.all_gather(scale, axis_name)      # (n, blocks, 1)
+    total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    m = 1
+    for d in x.shape:
+        m *= d
+    return total.reshape(-1)[:m].reshape(x.shape)
+
+
+def dp_allreduce_grads(grads, axis_name: str, compress: bool = False):
+    """Mean-reduce gradients across a data-parallel shard_map axis."""
+    n = jax.lax.psum(1, axis_name)
+    if compress:
+        return jax.tree.map(lambda g: compressed_psum(g, axis_name) / n, grads)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU):
+
+  gw_cost/          grid GW cost assembly — the paper's O(s^2) hotspot
+  flash_attention/  causal GQA online-softmax attention
+  sinkhorn/         VMEM-resident Sinkhorn scaling loop
+  ssd/              Mamba2 SSD intra-chunk (masked-decay) block
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + dispatch), ref.py (pure-jnp oracle); sweeps in tests/test_kernels.py.
+"""

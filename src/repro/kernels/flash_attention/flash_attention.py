@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Grid: (batch*heads, q_tiles, kv_tiles) — kv minor-most so the (m, l, acc)
+running statistics live in VMEM scratch across the kv sweep for one q tile.
+GQA is handled in the index maps: head ``h`` reads kv head ``h // G``, so
+grouped KV is never replicated in HBM. Causal masking is positional per
+tile; fully-masked tiles are skipped via ``pl.when`` (halves the work, the
+same trick the XLA blockwise path can't express).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bq: int, bk: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip tiles strictly above the diagonal (causal)
+    @pl.when(ki * bk <= qi * bq + bq - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, groups: int, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q: (BH, S, hd) flattened batch*heads; k, v: (BK, S, hd) flattened
+    batch*kv_heads with BH = BK * groups. Causal. Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    grid = (BH, S // bq, S // bk)
+    kv_index = lambda b, qi, ki: (b // groups, ki, 0)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (hd ** 0.5), bq=bq, bk=bk,
+                          n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu_or_fallback((bq,), jnp.float32),
+            pltpu_or_fallback((bq,), jnp.float32),
+            pltpu_or_fallback((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def pltpu_or_fallback(shape, dtype):
+    """VMEM scratch on TPU; plain pallas scratch in interpret mode."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        import jax.experimental.pallas as pl_
+        return pl_.MemorySpace.ANY(shape, dtype)

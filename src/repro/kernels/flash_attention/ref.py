@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: causal GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, S, H, hd); k, v: (B, S, K, hd), H = G*K. Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+import jax  # noqa: E402  (used above via jax.nn)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grid GW cost assembly.
+
+C[k, m] = Σ_{l,p} L(A[k,l], B[m,p]) T[l,p]   — the paper's O(s²) hotspot
+restructured on the grid support (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ground_cost as gc
+
+
+def gw_cost_ref(A, B, T, loss: str):
+    L = gc.get_loss(loss)
+    E = L(A[:, :, None, None], B[None, None, :, :])   # (K, L, M, P)
+    return jnp.einsum("klmp,lp->km", E.astype(jnp.float32),
+                      T.astype(jnp.float32))

@@ -1,0 +1,18 @@
+"""jit'd wrapper: VMEM-size gate + fallback to the jnp Sinkhorn."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sinkhorn import sinkhorn as sinkhorn_jnp
+from repro.kernels.sinkhorn.sinkhorn import sinkhorn_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+_VMEM_BUDGET = 8 * 2**20        # 8 MiB for the resident K (f32)
+
+
+def sinkhorn(a, b, K, iters: int = 50):
+    m, n = K.shape
+    if m * n * 4 <= _VMEM_BUDGET:
+        return sinkhorn_pallas(a, b, K, iters=iters, interpret=_INTERPRET)
+    return sinkhorn_jnp(a, b, K, iters)

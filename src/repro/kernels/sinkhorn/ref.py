@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: H Sinkhorn scaling iterations on a dense kernel matrix."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sinkhorn_ref(a, b, K, iters: int):
+    u = jnp.ones_like(a)
+    v = jnp.ones_like(b)
+    for _ in range(iters):
+        Kv = K @ v
+        u = jnp.where(Kv > 0, a / jnp.where(Kv > 0, Kv, 1.0), 0.0)
+        Ku = K.T @ u
+        v = jnp.where(Ku > 0, b / jnp.where(Ku > 0, Ku, 1.0), 0.0)
+    return u[:, None] * K * v[None, :]

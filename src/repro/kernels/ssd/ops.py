@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_intra_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def ssd_intra(xdt, cs, Bm, Cm, h_tile: int = 8):
+    """xdt: (G, k, H, P), cs: (G, k, H), Bm/Cm: (G, k, N) -> (G, k, H, P)."""
+    return ssd_intra_pallas(xdt, cs, Bm, Cm, h_tile=h_tile,
+                            interpret=_INTERPRET)

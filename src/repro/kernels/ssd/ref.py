@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: Mamba2 SSD intra-chunk (diagonal block) output."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(xdt, cs, Bm, Cm):
+    """xdt: (k, H, P) inputs pre-multiplied by dt; cs: (k, H) within-chunk
+    cumulative dA; Bm/Cm: (k, N). Returns y: (k, H, P) with
+    y[s] = Σ_{t≤s} (C_s·B_t) exp(cs_s - cs_t) xdt[t]."""
+    k = xdt.shape[0]
+    decay = jnp.exp(cs[:, None, :] - cs[None, :, :])          # (k, k, H)
+    tri = jnp.tril(jnp.ones((k, k), bool))
+    G = Cm @ Bm.T                                             # (k, k)
+    M = jnp.where(tri[:, :, None], G[:, :, None] * decay, 0.0)
+    return jnp.einsum("sth,thp->shp", M, xdt)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk (diagonal block) computation.
+
+The SSD chunked algorithm's dominant memory cost is the (k, k, H) decay
+tensor per chunk (zamba2: 128·128·112·4 B ≈ 7 MB per (batch, chunk) — and
+the XLA path materializes it across all chunks at once). This kernel tiles
+heads so each (k, k, h_tile) decay block lives only in VMEM/VREGs: the
+G = C·Bᵀ Gram matrix hits the MXU once per (batch·chunk) and the per-head
+masked-decay matmuls stream through on-chip.
+
+Grid: (batch·chunks, H / h_tile). Inter-chunk recurrence (cheap, sequential)
+stays in JAX (models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, cs_ref, b_ref, c_ref, o_ref, *, k: int, ht: int):
+    Bm = b_ref[0].astype(jnp.float32)                  # (k, N)
+    Cm = c_ref[0].astype(jnp.float32)                  # (k, N)
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (k, k)
+    cs = cs_ref[0].astype(jnp.float32)                 # (k, ht)
+    decay = jnp.exp(cs[:, None, :] - cs[None, :, :])   # (k, k, ht) in VMEM
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    tri = (t_idx <= s_idx)[:, :, None]
+    M = jnp.where(tri, G[:, :, None] * decay, 0.0)     # (k, k, ht)
+    xdt = xdt_ref[0].astype(jnp.float32)               # (k, ht, P)
+    # per-head (k, k) @ (k, P) matmuls on the MXU
+    y = jax.lax.dot_general(
+        M.transpose(2, 0, 1), xdt.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)            # (ht, k, P)
+    o_ref[0] = y.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("h_tile", "interpret"))
+def ssd_intra_pallas(xdt, cs, Bm, Cm, h_tile: int = 8,
+                     interpret: bool = True):
+    """xdt: (G, k, H, P) — G = batch*chunks; cs: (G, k, H);
+    Bm/Cm: (G, k, N). Returns y: (G, k, H, P) float32."""
+    Gn, k, H, P = xdt.shape
+    N = Bm.shape[-1]
+    while H % h_tile != 0:
+        h_tile //= 2
+    grid = (Gn, H // h_tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, ht=h_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k, h_tile, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, k, h_tile), lambda g, h: (g, 0, h)),
+            pl.BlockSpec((1, k, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, k, N), lambda g, h: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, h_tile, P), lambda g, h: (g, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Gn, k, H, P), jnp.float32),
+        interpret=interpret,
+    )(xdt, cs, Bm, Cm)

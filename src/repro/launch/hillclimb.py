@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Runs a named optimization variant for one (arch × shape × mesh) cell,
+records a tagged artifact JSON, and prints the before/after roofline terms.
+
+Variants:
+  sp          — sequence-parallel residual stream (saved activations under
+                remat shard over 'model'; SP all-gather at layer entry)
+  moe_bf16    — bf16 MoE dispatch/combine tensors
+  sp+moe_bf16 — both
+  embed_repl  — replicate the token embedding over 'model' (kills the
+                vocab-TP gather collective at the cost of replicated table)
+
+Usage:
+  python -m repro.launch.hillclimb --arch llama-3.2-vision-90b \
+      --shape train_4k --mesh single --variant sp
+"""
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.distrib import sharding as shd
+from repro.launch import dryrun as dr
+from repro.models.moe import set_moe_options
+from repro.models.sharding_ctx import set_activation_sharding
+from repro.models.ssm import set_mamba_options
+
+
+def apply_variant(variant: str, mesh):
+    rules = None
+    parts = variant.split("+")
+    dp = shd.data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    set_activation_sharding(True, dp=dp, dp_size=dp_size,
+                            model_size=mesh.shape["model"], sp="sp" in parts)
+    set_moe_options(bf16_dispatch="moe_bf16" in parts)
+    set_mamba_options(split_proj="mamba_split" in parts)
+    if "fc256" in parts:
+        from repro.models.attention import set_flash_chunk
+        set_flash_chunk(256)
+    if "embed_repl" in parts:
+        rules = dict(shd.DEFAULT_RULES)
+        rules["vocab"] = (None,)
+    return rules
+
+
+def run_variant(arch, shape, mesh_kind, variant, out_dir):
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = apply_variant(variant, mesh)
+    overrides = {}
+    for p in variant.split("+"):
+        if p.startswith("ssmchunk"):
+            overrides["ssm_chunk"] = int(p[len("ssmchunk"):])
+    return dr.run_cell(arch, shape, mesh_kind, out_dir, rules=rules,
+                       tag=variant, sp=("sp" in variant.split("+")),
+                       cfg_overrides=overrides or None)
+
+
+def compare(arch, shape, mesh_kind, variant, out_dir):
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+    from benchmarks.roofline import analyze
+    base = json.load(open(out_dir / f"{arch}__{shape}__{mesh_kind}.json"))
+    var = json.load(
+        open(out_dir / f"{arch}__{shape}__{mesh_kind}__{variant}.json"))
+    a, b = analyze(base), analyze(var)
+    print(f"\n{arch} {shape} {mesh_kind} — baseline -> {variant}")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s", "temp_GiB"):
+        delta = (b[k] - a[k]) / a[k] * 100 if a[k] else 0.0
+        print(f"  {k:16s} {a[k]:10.3e} -> {b[k]:10.3e}  ({delta:+.1f}%)")
+    print(f"  dominant: {a['dominant']} -> {b['dominant']}; "
+          f"roofline frac {a['roofline_fraction']:.3f} -> "
+          f"{b['roofline_fraction']:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default=str(dr.ART))
+    args = ap.parse_args()
+    out = Path(args.out)
+    run_variant(args.arch, args.shape, args.mesh, args.variant, out)
+    compare(args.arch, args.shape, args.mesh, args.variant, out)
+
+
+if __name__ == "__main__":
+    main()

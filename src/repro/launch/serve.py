@@ -1,0 +1,96 @@
+"""Batched serving loop: prefill + decode with a KV/state cache, plus a
+GW-distance scoring mode (the paper's technique as a serving feature —
+structural similarity between the hidden geometries of request batches).
+
+Usage (CPU example):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cb
+from repro.core.align import gw_alignment_loss
+from repro.models.model_zoo import Model
+
+
+def generate(model: Model, params, prompts, max_new: int,
+             act_dtype=jnp.float32, temperature: float = 0.0, img=None,
+             rng=None):
+    """prompts: (B, S0) int32. Greedy (or sampled) continuation.
+
+    Decode runs against a cache of length S0 + max_new; prefill fills the
+    first S0 entries (written into the padded cache functionally).
+    """
+    B, S0 = prompts.shape[0], prompts.shape[1]
+    total = S0 + max_new
+    cache = model.init_cache(B, total, dtype=act_dtype)
+
+    decode = jax.jit(
+        lambda p, tok, c, idx: model.decode_step(p, tok, c, idx, img=img,
+                                                 act_dtype=act_dtype))
+
+    # teacher-forced prefill via decode steps on the padded cache (exact);
+    # a fused prefill kernel is the production path for long prompts.
+    tok = prompts[:, :1] if prompts.ndim == 2 else prompts[:, :1, :]
+    logits = None
+    for t in range(S0):
+        logits, cache = decode(params, prompts[:, t:t + 1], cache,
+                               jnp.int32(t))
+    out = [prompts]
+    rng = rng or jax.random.PRNGKey(0)
+    for t in range(S0, total):
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            nxt = jax.random.categorical(k, logits[:, -1] / temperature,
+                                         axis=-1)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(nxt.astype(jnp.int32))
+        logits, cache = decode(params, nxt.astype(jnp.int32), cache,
+                               jnp.int32(t))
+    return jnp.concatenate(out, axis=1)
+
+
+def gw_similarity(model: Model, params, batch_a, batch_b, s: int = 32,
+                  act_dtype=jnp.float32):
+    """GW distance between the hidden geometries of two request batches."""
+    _, h_a, _ = model.forward(params, batch_a, act_dtype=act_dtype)
+    _, h_b, _ = model.forward(params, batch_b, act_dtype=act_dtype)
+    return gw_alignment_loss(jax.random.PRNGKey(0), h_a, h_b, s_r=s, s_c=s)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--metric", choices=("none", "gw"), default="none")
+    args = ap.parse_args()
+    cfg = cb.get_reduced(args.arch) if args.reduced else cb.get_arch(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    seqs = generate(model, params, prompts, args.gen)
+    dt = time.time() - t0
+    print(f"generated {seqs.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    if args.metric == "gw":
+        sim = gw_similarity(model, params, prompts,
+                            jnp.flip(prompts, axis=0))
+        print(f"GW(batch, reversed-batch) = {float(sim):.5f}")
+
+
+if __name__ == "__main__":
+    main()

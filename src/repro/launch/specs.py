@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct input stand-ins per (arch × shape) cell — no allocation.
+
+``input_specs`` mirrors the real batch structure from the data pipeline /
+serving frontends: weak-type-correct, shardable. Modality frontends are
+stubs per the assignment: VLM cells get precomputed patch embeddings, audio
+cells get multi-codebook token grids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model_zoo import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    if shape.kind == "train":
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        specs = {"tokens": sds(tok_shape, jnp.int32),
+                 "labels": sds(tok_shape, jnp.int32)}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        specs = {"tokens": sds(tok_shape, jnp.int32)}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return specs
+    # decode: one new token, cache of length S
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    specs = {"tokens": sds(tok_shape, jnp.int32),
+             "index": sds((), jnp.int32),
+             "cache": model.cache_spec(B, S, cache_dtype)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return specs

@@ -1,0 +1,75 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Builder
+
+
+def rmsnorm_params(b: Builder, d: int):
+    return {"scale": b.param((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["scale"]).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:                               # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_params(b: Builder, d: int, f: int):
+    return {
+        "w_gate": b.param((d, f), ("embed", "mlp")),
+        "w_up": b.param((d, f), ("embed", "mlp")),
+        "w_down": b.param((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def embed_params(b: Builder, vocab: int, d: int):
+    return {"table": b.param((vocab, d), ("vocab", "embed"), scale=0.02)}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p_head, x):
+    return x @ p_head
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean CE over tokens; logits in f32 for stability. labels: int ids.
+
+    The gold logit is extracted with a masked reduction (not a gather) so a
+    vocab-sharded (TP) logits tensor reduces locally + psum instead of
+    all-gathering the full vocab dim.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts MLP with top-k routing — two dispatch formulations.
+
+``gshard`` (default, SPMD/TPU-native): grouped one-hot dispatch built from
+cumsums — einsums only, no scatter/gather, so XLA SPMD reshards the
+token→expert hop as an all-to-all instead of replicating token tensors.
+Capacity is per-group (GShard semantics).
+
+``sort``: tokens argsorted by expert into an (E, capacity, D) buffer
+(modern grouped-GEMM style); global capacity; scatter-based — better on
+architectures with fast gather, kept as reference/CPU path.
+
+Both drop overflow tokens (capacity factor) and return the Switch
+load-balancing auxiliary loss; ``no_drop=True`` sizes buffers so nothing
+drops (used for decode and for cross-impl equivalence tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import mlp, mlp_params
+from repro.models.module import Builder
+from repro.models.sharding_ctx import constrain
+
+_GROUP_SIZE = 4096
+
+# Hillclimb lever: dispatch/combine tensors in bf16 instead of f32
+# (halves the largest MoE transients; gate weights stay f32 until applied).
+_MOE_OPTS = {"bf16_dispatch": False}
+
+
+def set_moe_options(**kw):
+    _MOE_OPTS.update(kw)
+
+
+def moe_params(b: Builder, cfg: ArchConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": b.param((d, E), ("embed", None)),
+        "w_gate": b.param((E, d, f), ("expert", "embed", "mlp")),
+        "w_up": b.param((E, d, f), ("expert", "embed", "mlp")),
+        "w_down": b.param((E, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.shared_expert:
+        p["shared"] = mlp_params(b, d, f)
+    return p
+
+
+def moe_mlp(p, cfg: ArchConfig, x, no_drop: bool = False,
+            impl: str = "gshard"):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    if impl == "gshard":
+        return moe_mlp_gshard(p, cfg, x, no_drop=no_drop)
+    return moe_mlp_sort(p, cfg, x, no_drop=no_drop)
+
+
+def moe_mlp_gshard(p, cfg: ArchConfig, x, no_drop: bool = False):
+    """GShard einsum dispatch. x: (B,S,D) -> (out, aux)."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    k = cfg.experts_per_token
+    Sg = min(_GROUP_SIZE, T)
+    while T % Sg != 0:
+        Sg //= 2
+    G = T // Sg
+    cap = Sg * k if no_drop else max(
+        1, int(Sg * k / E * cfg.capacity_factor))
+    xg = x.reshape(G, Sg, D)
+    xg = constrain(xg, "dp", None, None)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(logits, k)                # (G,Sg,k)
+    weights = jax.nn.softmax(gate_vals, axis=-1)
+
+    counts_used = jnp.zeros((G, E), jnp.float32)
+    comb_dtype = jnp.bfloat16 if _MOE_OPTS["bf16_dispatch"] else jnp.float32
+    dispatch = jnp.zeros((G, Sg, E, cap), jnp.bool_)
+    combine = jnp.zeros((G, Sg, E, cap), comb_dtype)
+    for j in range(k):
+        oh = jax.nn.one_hot(sel[..., j], E, dtype=jnp.float32)   # (G,Sg,E)
+        cum = jnp.cumsum(oh, axis=1) - oh                        # exclusive
+        pos_e = cum + counts_used[:, None, :]
+        pos = jnp.sum(oh * pos_e, axis=-1).astype(jnp.int32)     # (G,Sg)
+        keep = pos < cap
+        d_j = (oh.astype(bool)[..., None]
+               & jax.nn.one_hot(pos, cap, dtype=jnp.bool_)[:, :, None, :]
+               & keep[..., None, None])
+        dispatch = dispatch | d_j
+        combine = combine + (d_j * weights[..., j][..., None, None]
+                             ).astype(comb_dtype)
+        counts_used = counts_used + jnp.sum(oh, axis=1)
+
+    # Switch aux loss over all tokens
+    frac = jnp.mean(jnp.sum(dispatch, axis=3).astype(jnp.float32),
+                    axis=(0, 1))                             # (E,) usage
+    aux = E * jnp.sum(frac / k * jnp.mean(probs, axis=(0, 1)))
+
+    dm = dispatch.astype(x.dtype)
+    buf = jnp.einsum("gsec,gsd->gecd", dm, xg)               # token→expert hop
+    buf = constrain(buf, "dp", "model", None, None)          # EP all-to-all
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = constrain(y, "dp", "model", None, None)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), y)
+    out = constrain(out, "dp", None, None)
+    out = out.reshape(B, S, D)
+    if cfg.shared_expert:
+        out = out + mlp(p["shared"], x)
+    return out, aux
+
+
+def moe_mlp_sort(p, cfg: ArchConfig, x, no_drop: bool = False):
+    """Sort/scatter dispatch (global capacity). x: (B,S,D) -> (out, aux)."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    k = cfg.experts_per_token
+    cap = T * k if no_drop else max(1, int(T * k / E * cfg.capacity_factor))
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(logits, k)                # (T, k)
+    weights = jax.nn.softmax(gate_vals, axis=-1).astype(x.dtype)
+
+    # load-balance aux loss (Switch): E * Σ_e frac_tokens_e * mean_prob_e
+    counts = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(1.0)
+    aux = E * jnp.sum((counts / (T * k)) * jnp.mean(probs, axis=0))
+
+    # sort token-expert assignments by expert
+    ex = sel.reshape(-1)                                     # (T*k,)
+    wt = weights.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(ex)
+    ex_s, tok_s, wt_s = ex[order], tok[order], wt[order]
+    pos = jnp.arange(T * k) - jnp.searchsorted(ex_s, ex_s, side="left")
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                         # overflow -> slot `cap`
+
+    buf = jnp.zeros((E, cap + 1, D), x.dtype)
+    buf = buf.at[ex_s, slot].set(xf[tok_s])[:, :cap]         # (E, cap, D)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])           # (E, cap, D)
+
+    gathered = y[ex_s, jnp.minimum(pos, cap - 1)]            # (T*k, D)
+    contrib = gathered * (wt_s * keep.astype(x.dtype))[:, None]
+    out = jnp.zeros((T, D), x.dtype).at[tok_s].add(contrib)
+
+    if cfg.shared_expert:
+        out = out + mlp(p["shared"], xf)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (
+    AdamWState,
+    abstract_state,
+    cosine_schedule,
+    init,
+    state_axes,
+    update,
+)

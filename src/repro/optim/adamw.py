@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay, global-norm clipping, schedules."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.zeros_like, params))
+
+
+def abstract_state(abstract_params) -> AdamWState:
+    z = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                     abstract_params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), z, z)
+
+
+def state_axes(param_axes) -> AdamWState:
+    """Optimizer state shards exactly like its parameters."""
+    return AdamWState((), param_axes, param_axes)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def update(grads, state: AdamWState, params, lr, b1=0.9, b2=0.95, eps=1e-8,
+           weight_decay=0.1, max_grad_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, mu, nu):
+        mh = mu / bc1
+        vh = nu / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac=0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

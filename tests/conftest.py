@@ -1,0 +1,27 @@
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_with_devices(code: str, n_devices: int = 4, timeout: int = 420):
+    """Run a snippet in a subprocess with N forced host devices (the main
+    process is locked to 1 device once jax initializes)."""
+    env = {"PYTHONPATH": "src",
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+           "PATH": "/usr/bin:/bin"}
+    import os
+    env["PATH"] = os.environ.get("PATH", env["PATH"])
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env={**os.environ, **env}, cwd=".")
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture
+def multi_device_runner():
+    return run_with_devices

@@ -1,0 +1,112 @@
+"""Sinkhorn solver unit + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sinkhorn import (
+    segment_logsumexp,
+    sinkhorn,
+    sinkhorn_log,
+    sinkhorn_unbalanced,
+    sinkhorn_unbalanced_log,
+    sparse_sinkhorn,
+    sparse_sinkhorn_logdomain,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _simplex(key, n):
+    x = jax.random.uniform(key, (n,)) + 0.1
+    return x / x.sum()
+
+
+def test_sinkhorn_marginals():
+    m, n = 24, 17
+    a = _simplex(KEY, m)
+    b = _simplex(jax.random.PRNGKey(1), n)
+    K = jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.05
+    T = sinkhorn(a, b, K, 200)
+    np.testing.assert_allclose(np.array(T.sum(1)), np.array(a), rtol=1e-4)
+    np.testing.assert_allclose(np.array(T.sum(0)), np.array(b), rtol=1e-4)
+
+
+def test_log_domain_matches_plain():
+    m, n = 16, 16
+    a = _simplex(KEY, m)
+    b = _simplex(jax.random.PRNGKey(1), n)
+    K = jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.05
+    T1 = sinkhorn(a, b, K, 60)
+    T2 = sinkhorn_log(a, b, jnp.log(K), 60)
+    np.testing.assert_allclose(np.array(T1), np.array(T2), atol=1e-5)
+
+
+def test_log_domain_survives_small_epsilon():
+    """Plain domain underflows at eps=1e-3 with O(1) costs; log domain must
+    still satisfy marginals."""
+    m = 32
+    a = _simplex(KEY, m)
+    b = _simplex(jax.random.PRNGKey(1), m)
+    C = jax.random.uniform(jax.random.PRNGKey(2), (m, m)) * 5.0
+    T = sinkhorn_log(a, b, -C / 1e-3, 300)
+    assert np.isfinite(np.array(T)).all()
+    np.testing.assert_allclose(np.array(T.sum(0)), np.array(b), rtol=1e-3)
+
+
+def test_unbalanced_log_matches_plain():
+    m, n = 12, 14
+    a = jax.random.uniform(KEY, (m,)) + 0.2
+    b = jax.random.uniform(jax.random.PRNGKey(1), (n,)) + 0.2
+    K = jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.1
+    T1 = sinkhorn_unbalanced(a, b, K, 1.0, 0.1, 80)
+    T2 = sinkhorn_unbalanced_log(a, b, jnp.log(K), 1.0, 0.1, 80)
+    np.testing.assert_allclose(np.array(T1), np.array(T2), atol=1e-5)
+
+
+def test_sparse_matches_dense_on_full_support():
+    """COO Sinkhorn on the full index set == dense Sinkhorn."""
+    m, n = 9, 7
+    a = _simplex(KEY, m)
+    b = _simplex(jax.random.PRNGKey(1), n)
+    K = jax.random.uniform(jax.random.PRNGKey(2), (m, n)) + 0.05
+    rows, cols = jnp.meshgrid(jnp.arange(m), jnp.arange(n), indexing="ij")
+    rows, cols = rows.reshape(-1), cols.reshape(-1)
+    vals = K[rows, cols]
+    T_dense = sinkhorn(a, b, K, 100)
+    t_sparse = sparse_sinkhorn(a, b, rows, cols, vals, m, n, 100)
+    np.testing.assert_allclose(np.array(T_dense[rows, cols]),
+                               np.array(t_sparse), rtol=1e-5, atol=1e-8)
+    t_log = sparse_sinkhorn_logdomain(a, b, rows, cols, jnp.log(vals), m, n,
+                                      100)
+    np.testing.assert_allclose(np.array(t_sparse), np.array(t_log),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_segment_logsumexp_matches_dense():
+    vals = jnp.array([0.0, 1.0, -2.0, 3.0, 0.5])
+    segs = jnp.array([0, 0, 2, 2, 2])
+    out = segment_logsumexp(vals, segs, 4)
+    expect0 = np.logaddexp(0.0, 1.0)
+    expect2 = np.log(np.exp(-2.0) + np.exp(3.0) + np.exp(0.5))
+    assert np.allclose(out[0], expect0)
+    assert np.allclose(out[2], expect2)
+    assert out[1] < -1e29 and out[3] < -1e29  # empty segments
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 20), st.integers(4, 20), st.integers(0, 1000))
+def test_property_marginals_and_nonnegativity(m, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = _simplex(k1, m)
+    b = _simplex(k2, n)
+    K = jax.random.uniform(k3, (m, n)) + 0.05
+    T = sinkhorn(a, b, K, 150)
+    T = np.array(T)
+    assert (T >= -1e-9).all()
+    np.testing.assert_allclose(T.sum(0), np.array(b), rtol=5e-3)
+    # scaling invariance: gamma*K gives the same coupling
+    T2 = np.array(sinkhorn(a, b, 3.7 * K, 150))
+    np.testing.assert_allclose(T, T2, rtol=1e-4, atol=1e-8)
