@@ -18,6 +18,7 @@ HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+AUTOTUNE_ART = Path(__file__).resolve().parents[1] / "artifacts" / "autotune"
 
 SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
                 "decode_32k": 128, "long_500k": 1}
@@ -83,7 +84,28 @@ def table(mesh="single", tag=""):
     return rows
 
 
+def autotune_table():
+    """Kernel micro-autotune records (written via repro.kernels.dispatch
+    by the benchmarks, e.g. bench_spar_cost). One row per sweep."""
+    rows = []
+    for p in sorted(AUTOTUNE_ART.glob("*.json")) if AUTOTUNE_ART.exists() \
+            else []:
+        with open(p) as f:
+            rows.extend(json.load(f))
+    return rows
+
+
 def main():
+    tune = autotune_table()
+    if tune:
+        print("\n=== kernel autotune (dispatch records) ===")
+        print(f"{'family':18s} {'backend':8s} {'best':>6s}  timings")
+        for r in tune:
+            timings = " ".join(f"{k}:{v*1e6:.0f}us"
+                               for k, v in sorted(r["timings_s"].items(),
+                                                  key=lambda kv: int(kv[0])))
+            print(f"{r['family']:18s} {r['backend']:8s} "
+                  f"{r['best_block']:6d}  {timings}")
     for mesh in ("single", "multi"):
         rows = table(mesh)
         if not rows:

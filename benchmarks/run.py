@@ -16,13 +16,14 @@ def main() -> None:
         bench_fig6_fgw,
         bench_grid_vs_coo,
         bench_lm_step,
+        bench_spar_cost,
         bench_tables23_graphs,
     )
     print("name,us_per_call,derived")
     failures = []
     for mod in (bench_fig2, bench_fig3_ugw, bench_fig4_sensitivity,
                 bench_fig5_scaling, bench_fig6_fgw, bench_grid_vs_coo,
-                bench_tables23_graphs, bench_lm_step):
+                bench_spar_cost, bench_tables23_graphs, bench_lm_step):
         try:
             mod.main()
         except Exception:  # noqa: BLE001

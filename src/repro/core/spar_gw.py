@@ -5,6 +5,14 @@ Sparse coupling supported on ``s`` importance-sampled index pairs
 O(H s) sparse Sinkhorn. Static shapes throughout (TPU/JAX requirement):
 ``s`` is fixed and duplicates in S are legitimate parallel entries (the
 segment-sum Sinkhorn merges them per row/col, preserving marginals).
+
+The O(s²) cost assembly routes through the ``repro.kernels.spar_cost``
+family via ``cost_impl`` ∈ {"auto", "jnp", "pallas", "materialized"}:
+the kernels compute the affine form L-matvec(t) + off, so the whole
+log-kernel logK = -(α/ε) L@T̃ + off (off folding log w, log T̃ and the FGW
+linear term) is formed in one fused pass per outer iteration. SPAR-GW,
+SPAR-FGW (and SPAR-UGW in spar_ugw.py) share the same outer step,
+parameterized by the linear term. See DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -14,47 +22,61 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import ground_cost as gc
 from repro.core import sampling
 from repro.core.sinkhorn import sparse_sinkhorn, sparse_sinkhorn_logdomain
 
 
+def _cost_factory():
+    # deferred: kernels.spar_cost.ref needs core.ground_cost, so a
+    # module-level import here would be circular
+    from repro.kernels.spar_cost.ops import make_spar_cost_fn
+    return make_spar_cost_fn
+
+
 def spar_cost(Cx, Cy, rows, cols, tvals, loss: str, chunk: int = 1024):
-    """C̃(T̃)_k = Σ_l L(Cx[r_k, r_l], Cy[c_k, c_l]) T̃_l for k ∈ [s].  O(s²).
+    """Reference COO cost assembly (kept as the public jnp oracle)."""
+    from repro.kernels.spar_cost.ref import spar_cost_ref
+    return spar_cost_ref(Cx, Cy, rows, cols, tvals, loss, chunk)
 
-    Row-chunked so the gathered (chunk, s) blocks stay cache/VMEM-sized.
+
+def _pga_step(T, cost_fn, a, b, rows, cols, w, logw, m: int, n: int,
+              epsilon, inner_iters: int, reg: str, stable: bool,
+              alpha=1.0, lin=0.0):
+    """One proximal/entropic PGA outer step on the COO support.
+
+    Shared by SPAR-GW (α = 1, lin = 0) and SPAR-FGW (lin = M̃): the
+    iteration cost is C = α·(L @ T̃) + (1-α)·lin, and in the stable path
+    the fused cost_fn writes logK = -C/ε + log w (+ log T̃) directly.
     """
-    L = gc.get_loss(loss)
-    s = rows.shape[0]
-    chunk = min(chunk, s)
-    n_chunks = -(-s // chunk)
-    pad = n_chunks * chunk - s
-    rows_p = jnp.pad(rows, (0, pad))
-    cols_p = jnp.pad(cols, (0, pad))
-
-    def one(args):
-        rk, ck = args                      # (chunk,)
-        Gx = Cx[rk][:, rows]               # (chunk, s)
-        Gy = Cy[ck][:, cols]               # (chunk, s)
-        return L(Gx, Gy) @ tvals           # (chunk,)
-
-    out = lax.map(one, (rows_p.reshape(n_chunks, chunk),
-                        cols_p.reshape(n_chunks, chunk)))
-    return out.reshape(-1)[:s]
+    if stable:
+        off = logw - ((1.0 - alpha) / epsilon) * lin
+        if reg == "prox":
+            off = off + jnp.log(jnp.maximum(T, 1e-38))
+        logK = cost_fn((-alpha / epsilon) * T, off)
+        return sparse_sinkhorn_logdomain(a, b, rows, cols, logK, m, n,
+                                         inner_iters)
+    C = cost_fn(alpha * T, (1.0 - alpha) * lin)
+    Cs = C - jnp.min(C)          # constant shift — Sinkhorn-invariant
+    K = jnp.exp(-Cs / epsilon) * w
+    if reg == "prox":
+        K = K * T
+    return sparse_sinkhorn(a, b, rows, cols, K, m, n, inner_iters)
 
 
 @partial(jax.jit,
          static_argnames=("s", "loss", "reg", "outer_iters", "inner_iters",
-                          "cost_chunk", "stable"))
+                          "cost_chunk", "stable", "cost_impl"))
 def spar_gw(key, a, b, Cx, Cy, s: int, loss: str = "l2", reg: str = "prox",
             epsilon: float = 1e-2, outer_iters: int = 20,
             inner_iters: int = 50, shrink: float = 0.0,
-            cost_chunk: int = 1024, stable: bool = True):
+            cost_chunk: int = 1024, stable: bool = True,
+            cost_impl: str = "auto"):
     """Algorithm 2. Returns (gw_estimate, (rows, cols, coupling_values)).
 
     reg='prox' uses the Bregman proximal term KL(T‖T^(r)) (PGA);
     reg='ent' uses the entropic regularizer H(T). ``stable=True`` runs the
-    sparse Sinkhorn in log domain (fp32-safe for small ε).
+    sparse Sinkhorn in log domain (fp32-safe for small ε). ``cost_impl``
+    selects the O(s²) cost-assembly backend (see module docstring).
     """
     m, n = Cx.shape[0], Cy.shape[0]
     probs = sampling.balanced_probs(a, b, shrink)
@@ -62,38 +84,28 @@ def spar_gw(key, a, b, Cx, Cy, s: int, loss: str = "l2", reg: str = "prox",
     p = probs.pair_prob(rows, cols)                     # (s,)
     w = 1.0 / (s * p)                                   # importance adjustment
     T = a[rows] * b[cols]                               # step 4 init on S
+    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
+                              chunk=cost_chunk)
+    step = partial(_pga_step, cost_fn=cost_fn, a=a, b=b, rows=rows,
+                   cols=cols, w=w, logw=jnp.log(w), m=m, n=n,
+                   epsilon=epsilon, inner_iters=inner_iters, reg=reg,
+                   stable=stable)
 
-    def outer(T, _):
-        C = spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk)
-        if stable:
-            logK = -C / epsilon + jnp.log(w)
-            if reg == "prox":
-                logK = logK + jnp.log(jnp.maximum(T, 1e-38))
-            T_new = sparse_sinkhorn_logdomain(a, b, rows, cols, logK, m, n,
-                                              inner_iters)
-        else:
-            Cs = C - jnp.min(C)      # constant shift — Sinkhorn-invariant
-            K = jnp.exp(-Cs / epsilon) * w
-            if reg == "prox":
-                K = K * T
-            T_new = sparse_sinkhorn(a, b, rows, cols, K, m, n, inner_iters)
-        return T_new, None
-
-    T, _ = lax.scan(outer, T, None, length=outer_iters)
+    T, _ = lax.scan(lambda T, _: (step(T), None), T, None,
+                    length=outer_iters)
     # Step 8: plug-in objective on the sparse support, O(s²).
-    C_final = spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk)
-    value = jnp.sum(T * C_final)
+    value = jnp.sum(T * cost_fn(T))
     return value, (rows, cols, T)
 
 
 @partial(jax.jit,
          static_argnames=("s", "loss", "reg", "outer_iters", "inner_iters",
-                          "cost_chunk", "stable"))
+                          "cost_chunk", "stable", "cost_impl"))
 def spar_fgw(key, a, b, Cx, Cy, M, s: int, alpha: float = 0.6,
              loss: str = "l2", reg: str = "prox", epsilon: float = 1e-2,
              outer_iters: int = 20, inner_iters: int = 50,
              shrink: float = 0.0, cost_chunk: int = 1024,
-             stable: bool = True):
+             stable: bool = True, cost_impl: str = "auto"):
     """SPAR-FGW — Algorithm 4 (appendix A). Fused GW with feature matrix M.
 
     C̃_fu(T̃) = α Σ L̃ T̃ + (1-α) M̃ on the sampled support.
@@ -106,25 +118,15 @@ def spar_fgw(key, a, b, Cx, Cy, M, s: int, alpha: float = 0.6,
     w = 1.0 / (s * p)
     Ms = M[rows, cols]                                  # M̃ on S
     T = a[rows] * b[cols]
+    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
+                              chunk=cost_chunk)
+    step = partial(_pga_step, cost_fn=cost_fn, a=a, b=b, rows=rows,
+                   cols=cols, w=w, logw=jnp.log(w), m=m, n=n,
+                   epsilon=epsilon, inner_iters=inner_iters, reg=reg,
+                   stable=stable, alpha=alpha, lin=Ms)
 
-    def outer(T, _):
-        C = alpha * spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk) \
-            + (1.0 - alpha) * Ms
-        if stable:
-            logK = -C / epsilon + jnp.log(w)
-            if reg == "prox":
-                logK = logK + jnp.log(jnp.maximum(T, 1e-38))
-            T_new = sparse_sinkhorn_logdomain(a, b, rows, cols, logK, m, n,
-                                              inner_iters)
-            return T_new, None
-        Cs = C - jnp.min(C)
-        K = jnp.exp(-Cs / epsilon) * w
-        if reg == "prox":
-            K = K * T
-        T_new = sparse_sinkhorn(a, b, rows, cols, K, m, n, inner_iters)
-        return T_new, None
-
-    T, _ = lax.scan(outer, T, None, length=outer_iters)
-    quad = jnp.sum(T * spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk))
+    T, _ = lax.scan(lambda T, _: (step(T), None), T, None,
+                    length=outer_iters)
+    quad = jnp.sum(T * cost_fn(T))
     lin = jnp.sum(Ms * T)
     return alpha * quad + (1.0 - alpha) * lin, (rows, cols, T)

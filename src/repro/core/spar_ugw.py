@@ -24,7 +24,7 @@ from repro.core.sinkhorn import (
     sinkhorn_unbalanced_log,
     sparse_sinkhorn_unbalanced_log,
 )
-from repro.core.spar_gw import spar_cost
+from repro.core.spar_gw import _cost_factory, spar_cost
 from repro.core.utils import quadratic_kl
 
 
@@ -37,22 +37,25 @@ def _marginal_penalty(T_rows_sum, T_cols_sum, a, b, lam):
     return lam * (t1 + t2)
 
 
-def ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss: str, cost_chunk=1024):
+def ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss: str, cost_chunk=1024,
+              cost_fn=None):
     """UGW objective on a sparse coupling (Alg. 3 step 11)."""
     m, n = a.shape[0], b.shape[0]
     mu = jax.ops.segment_sum(T, rows, num_segments=m)
     nu = jax.ops.segment_sum(T, cols, num_segments=n)
-    quad = jnp.sum(T * spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk))
+    if cost_fn is None:
+        cost_fn = lambda t: spar_cost(Cx, Cy, rows, cols, t, loss, cost_chunk)
+    quad = jnp.sum(T * cost_fn(T))
     return quad + lam * quadratic_kl(mu, a) + lam * quadratic_kl(nu, b)
 
 
 @partial(jax.jit,
          static_argnames=("s", "loss", "outer_iters", "inner_iters",
-                          "cost_chunk"))
+                          "cost_chunk", "cost_impl"))
 def spar_ugw(key, a, b, Cx, Cy, s: int, loss: str = "l2", lam: float = 1.0,
              epsilon: float = 1e-2, outer_iters: int = 20,
              inner_iters: int = 50, shrink: float = 0.0,
-             cost_chunk: int = 1024):
+             cost_chunk: int = 1024, cost_impl: str = "auto"):
     """Algorithm 3. Returns (ugw_estimate, (rows, cols, coupling_values))."""
     m, n = Cx.shape[0], Cy.shape[0]
     ma, mb = jnp.sum(a), jnp.sum(b)
@@ -71,6 +74,8 @@ def spar_ugw(key, a, b, Cx, Cy, s: int, loss: str = "l2", lam: float = 1.0,
     p = P[rows, cols]
     logw = -jnp.log(s * jnp.maximum(p, 1e-38))
     T = a[rows] * b[cols] / scale
+    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
+                              chunk=cost_chunk)
 
     def outer(T, _):
         mT = jnp.sum(T)
@@ -78,9 +83,10 @@ def spar_ugw(key, a, b, Cx, Cy, s: int, loss: str = "l2", lam: float = 1.0,
         lam_bar = lam * mT
         mu = jax.ops.segment_sum(T, rows, num_segments=m)
         nu = jax.ops.segment_sum(T, cols, num_segments=n)
-        C = spar_cost(Cx, Cy, rows, cols, T, loss, cost_chunk) \
-            + _marginal_penalty(mu, nu, a, b, lam)
-        logK = -C / eps_bar + jnp.log(jnp.maximum(T, 1e-38)) + logw
+        # fused: logK = -(L@T̃ + penalty)/ε̄ + log T̃ + log w in one pass
+        off = (-_marginal_penalty(mu, nu, a, b, lam) / eps_bar
+               + jnp.log(jnp.maximum(T, 1e-38)) + logw)
+        logK = cost_fn((-1.0 / eps_bar) * T, off)
         T_new = sparse_sinkhorn_unbalanced_log(
             a, b, rows, cols, logK, lam_bar, eps_bar, m, n, inner_iters)
         # step 10: mass rescaling
@@ -88,7 +94,8 @@ def spar_ugw(key, a, b, Cx, Cy, s: int, loss: str = "l2", lam: float = 1.0,
         return T_new, None
 
     T, _ = lax.scan(outer, T, None, length=outer_iters)
-    value = ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss, cost_chunk)
+    value = ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss, cost_chunk,
+                      cost_fn=cost_fn)
     return value, (rows, cols, T)
 
 

@@ -1,30 +1,26 @@
 """jit'd public wrapper for the gw_cost kernel: padding + dispatch."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
+from repro.kernels import dispatch
 from repro.kernels.gw_cost.gw_cost import gw_cost_pallas
 
-# interpret=True on CPU (validation); on TPU the Mosaic path compiles.
-_INTERPRET = jax.default_backend() != "tpu"
+dispatch.register("gw_cost", default_block=32,
+                  description="grid GW cost assembly (4-D contraction)")
 
 
-def _pad_to(x, mults):
-    pads = [(0, (-x.shape[i]) % mults[i]) for i in range(x.ndim)]
-    if any(p[1] for p in pads):
-        return jnp.pad(x, pads), x.shape
-    return x, x.shape
-
-
-def gw_cost(A, B, T, loss: str = "l1", block: int = 32):
+def gw_cost(A, B, T, loss: str = "l1", block: Optional[int] = None,
+            interpret: Optional[bool] = None):
     """C[k,m] = Σ_{l,p} L(A[k,l], B[m,p]) T[l,p], padded + unpadded."""
     K, M = A.shape[0], B.shape[0]
-    A_p, _ = _pad_to(A, (block, block))
-    B_p, _ = _pad_to(B, (block, block))
-    T_p, _ = _pad_to(T, (block, block))
+    block = dispatch.block_size("gw_cost", block)
+    A_p, _ = dispatch.pad_to_multiple(A, (block, block))
+    B_p, _ = dispatch.pad_to_multiple(B, (block, block))
+    T_p, _ = dispatch.pad_to_multiple(T, (block, block))
     # zero-padded T rows/cols contribute L(A,B)*0 = 0; padded A/B rows only
     # produce extra output rows/cols, sliced away below.
     out = gw_cost_pallas(A_p, B_p, T_p, loss=loss, bk=block, bm=block,
-                         bl=block, bp=block, interpret=_INTERPRET)
+                         bl=block, bp=block,
+                         interpret=dispatch.interpret_mode(interpret))
     return out[:K, :M]

@@ -1,18 +1,19 @@
 """jit'd wrapper: VMEM-size gate + fallback to the jnp Sinkhorn."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from repro.core.sinkhorn import sinkhorn as sinkhorn_jnp
+from repro.kernels import dispatch
 from repro.kernels.sinkhorn.sinkhorn import sinkhorn_pallas
 
-_INTERPRET = jax.default_backend() != "tpu"
-_VMEM_BUDGET = 8 * 2**20        # 8 MiB for the resident K (f32)
+dispatch.register("sinkhorn", default_block=0,
+                  description="VMEM-resident Sinkhorn scaling loop")
 
 
-def sinkhorn(a, b, K, iters: int = 50):
+def sinkhorn(a, b, K, iters: int = 50, interpret: Optional[bool] = None):
     m, n = K.shape
-    if m * n * 4 <= _VMEM_BUDGET:
-        return sinkhorn_pallas(a, b, K, iters=iters, interpret=_INTERPRET)
+    if m * n * 4 <= dispatch.vmem_budget():
+        return sinkhorn_pallas(a, b, K, iters=iters,
+                               interpret=dispatch.interpret_mode(interpret))
     return sinkhorn_jnp(a, b, K, iters)

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _optional import given, settings, st  # guarded hypothesis import
 
 from repro.core import (
     dense_cost,
@@ -181,6 +182,7 @@ def test_ugw_finite_and_reasonable():
         1.0 * max(abs(float(v_dense)), 0.05)
 
 
+@pytest.mark.optional_dep("hypothesis")
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 100))
 def test_property_spar_gw_nonnegative_l2(seed):

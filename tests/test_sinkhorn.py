@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st  # guarded hypothesis import
 
 from repro.core.sinkhorn import (
     segment_logsumexp,
@@ -95,6 +95,7 @@ def test_segment_logsumexp_matches_dense():
     assert out[1] < -1e29 and out[3] < -1e29  # empty segments
 
 
+@pytest.mark.optional_dep("hypothesis")
 @settings(max_examples=15, deadline=None)
 @given(st.integers(4, 20), st.integers(4, 20), st.integers(0, 1000))
 def test_property_marginals_and_nonnegativity(m, n, seed):

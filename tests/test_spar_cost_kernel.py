@@ -1,0 +1,200 @@
+"""Parity (interpret mode) + regression tests for the fused spar_cost
+kernel family, and for the unified kernels/dispatch.py layer."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spar_gw import spar_gw
+from repro.kernels import dispatch
+from repro.kernels.spar_cost.ops import (
+    make_spar_cost_fn,
+    resolve_impl,
+    spar_cost_fused,
+    spar_matvec,
+)
+from repro.kernels.spar_cost.ref import materialize_loss, spar_cost_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _support(m, n, s, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    Cx = jax.random.uniform(ks[0], (m, m)) + 0.1        # >0 so kl is finite
+    Cy = jax.random.uniform(ks[1], (n, n)) + 0.1
+    rows = jax.random.randint(ks[2], (s,), 0, m)
+    cols = jax.random.randint(ks[3], (s,), 0, n)
+    t = jax.random.uniform(ks[4], (s,))
+    return Cx, Cy, rows, cols, t
+
+
+# ---------------------------------------------------------------------------
+# kernel parity vs the jnp lax.map oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", ["l1", "l2", "kl"])
+@pytest.mark.parametrize("s", [64, 96, 100, 33])   # incl. non-block-multiples
+def test_fused_kernel_matches_oracle(loss, s):
+    Cx, Cy, rows, cols, t = _support(50, 60, s, seed=s)
+    ref = spar_cost_ref(Cx, Cy, rows, cols, t, loss, chunk=32)
+    got = spar_cost_fused(Cx, Cy, rows, cols, t, loss=loss, block=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.array(got), np.array(ref), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("loss", ["l1", "l2", "kl"])
+def test_materialized_matvec_matches_oracle(loss):
+    s = 100
+    Cx, Cy, rows, cols, t = _support(40, 40, s, seed=7)
+    ref = spar_cost_ref(Cx, Cy, rows, cols, t, loss, chunk=64)
+    Lmat = materialize_loss(Cx, Cy, rows, cols, loss, chunk=64)
+    got = spar_matvec(Lmat, t, block=32, interpret=True)
+    np.testing.assert_allclose(np.array(got), np.array(ref), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_duplicate_pairs_are_parallel_entries():
+    """Duplicate (row, col) draws are legitimate parallel COO entries —
+    every impl must treat them independently (gather semantics)."""
+    s = 64
+    Cx, Cy, _, _, t = _support(30, 30, s, seed=3)
+    rows = jnp.zeros((s,), jnp.int32).at[1:].set(
+        jax.random.randint(KEY, (s - 1,), 0, 30))
+    cols = rows[::-1]                                   # forced duplicates
+    rows = rows.at[10:20].set(rows[0])                  # repeated pairs
+    cols = cols.at[10:20].set(cols[0])
+    for loss in ("l1", "l2"):
+        ref = spar_cost_ref(Cx, Cy, rows, cols, t, loss, chunk=16)
+        got = spar_cost_fused(Cx, Cy, rows, cols, t, loss=loss, block=16,
+                              interpret=True)
+        np.testing.assert_allclose(np.array(got), np.array(ref), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_affine_epilogue_offset():
+    """out = L @ t + off — the epilogue that forms logK on-chip."""
+    s = 96
+    Cx, Cy, rows, cols, t = _support(25, 35, s, seed=11)
+    off = jax.random.normal(jax.random.PRNGKey(12), (s,))
+    ref = spar_cost_ref(Cx, Cy, rows, cols, t, "l2", chunk=32) + off
+    got = spar_cost_fused(Cx, Cy, rows, cols, t, off, loss="l2", block=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.array(got), np.array(ref), rtol=1e-4,
+                               atol=1e-5)
+    Lmat = materialize_loss(Cx, Cy, rows, cols, "l2", chunk=32)
+    got2 = spar_matvec(Lmat, t, off, block=32, interpret=True)
+    np.testing.assert_allclose(np.array(got2), np.array(ref), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_make_spar_cost_fn_impls_agree():
+    s = 80
+    Cx, Cy, rows, cols, t = _support(30, 45, s, seed=5)
+    off = jnp.linspace(-1.0, 1.0, s)
+    outs = {}
+    for impl in ("jnp", "pallas", "materialized"):
+        fn = make_spar_cost_fn(Cx, Cy, rows, cols, "l2", impl=impl,
+                               chunk=32, block=16)
+        outs[impl] = np.array(fn(t, off))
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"], rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(outs["materialized"], outs["jnp"], rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# solver-level regression: cost_impl must not change the estimate
+# ---------------------------------------------------------------------------
+
+def test_spar_gw_pallas_and_materialized_match():
+    n = 32
+    x = jax.random.normal(KEY, (n, 2))
+    Cx = jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+    y = jax.random.normal(jax.random.PRNGKey(1), (n, 2)) * 1.3
+    Cy = jnp.sqrt(jnp.sum((y[:, None] - y[None, :]) ** 2, -1))
+    a = b = jnp.ones(n) / n
+    kw = dict(s=8 * n, loss="l2", epsilon=1e-2, outer_iters=5,
+              inner_iters=20)
+    key = jax.random.PRNGKey(42)
+    v_jnp, (_, _, T_jnp) = spar_gw(key, a, b, Cx, Cy, cost_impl="jnp", **kw)
+    v_pal, (_, _, T_pal) = spar_gw(key, a, b, Cx, Cy, cost_impl="pallas",
+                                   **kw)
+    v_mat, (_, _, T_mat) = spar_gw(key, a, b, Cx, Cy,
+                                   cost_impl="materialized", **kw)
+    np.testing.assert_allclose(float(v_pal), float(v_jnp), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(v_mat), float(v_jnp), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.array(T_pal), np.array(T_mat), rtol=1e-4,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer
+# ---------------------------------------------------------------------------
+
+def test_no_import_time_interpret_globals():
+    """Acceptance: no per-ops.py _INTERPRET globals remain — backend is
+    resolved at call time inside kernels/dispatch.py."""
+    for mod in ("repro.kernels.gw_cost.ops", "repro.kernels.sinkhorn.ops",
+                "repro.kernels.flash_attention.ops", "repro.kernels.ssd.ops",
+                "repro.kernels.spar_cost.ops"):
+        assert not hasattr(importlib.import_module(mod), "_INTERPRET"), mod
+
+
+def test_interpret_mode_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert dispatch.interpret_mode() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert dispatch.interpret_mode() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "auto")
+    assert dispatch.interpret_mode() == (jax.default_backend() != "tpu")
+    # explicit override beats the env
+    assert dispatch.interpret_mode(True) is True
+
+
+def test_block_size_resolution_order(monkeypatch):
+    dispatch.register("_test_family", default_block=64)
+    assert dispatch.block_size("_test_family") == 64
+    monkeypatch.setenv("REPRO_BLOCK__TEST_FAMILY", "16")
+    assert dispatch.block_size("_test_family") == 16
+    assert dispatch.block_size("_test_family", override=8) == 8
+    assert dispatch.block_size("_test_family", cap=4) == 4
+
+
+def test_autotune_caches_best_block(monkeypatch):
+    dispatch.register("_test_tune", default_block=128)
+    calls = []
+
+    def bench(block):
+        calls.append(block)
+        if block == 32:
+            import time
+            time.sleep(0.002)
+        return jnp.zeros(())
+
+    best = dispatch.autotune("_test_tune", [8, 32], bench, reps=1)
+    assert best == 8
+    monkeypatch.delenv("REPRO_BLOCK__TEST_TUNE", raising=False)
+    assert dispatch.block_size("_test_tune") == 8
+    recs = [r for r in dispatch.autotune_records()
+            if r["family"] == "_test_tune"]
+    assert recs and recs[-1]["best_block"] == 8
+
+
+def test_pad_unpad_roundtrip():
+    x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    xp, shape = dispatch.pad_to_multiple(x, (8, 128))
+    assert xp.shape == (8, 128)
+    np.testing.assert_array_equal(np.array(dispatch.unpad(xp, shape)),
+                                  np.array(x))
+
+
+def test_resolve_impl_auto_gate(monkeypatch):
+    monkeypatch.setenv("REPRO_SPAR_MATERIALIZE_BUDGET", str(4 * 100 * 100))
+    assert resolve_impl("auto", 100) == "materialized"
+    assert resolve_impl("auto", 101) in ("pallas", "jnp")
+    assert resolve_impl("jnp", 10**9) == "jnp"
