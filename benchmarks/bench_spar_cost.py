@@ -17,9 +17,9 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+import repro
 from benchmarks.common import FULL, record, timed
 from benchmarks.datasets import moon
-from repro.core import spar_gw
 from repro.core import sampling
 from repro.kernels import dispatch
 from repro.kernels.spar_cost.ops import make_spar_cost_fn, spar_matvec
@@ -60,16 +60,19 @@ def bench_cell(n: int, ratio: int, reps: int, loss: str = "l2"):
 
     # --- end-to-end solver wall-clock (compiled path per impl, paper
     # defaults: 20 outer iterations amortize the one-time materialization)
-    kw = dict(s=s, loss=loss, epsilon=1e-2, outer_iters=20, inner_iters=50)
+    problem = repro.QuadraticProblem(repro.Geometry(Cx, a),
+                                     repro.Geometry(Cy, b), loss=loss)
     gw_times = {}
     for impl in IMPLS:
-        sec, (v, _) = timed(
-            lambda k, impl=impl: spar_gw(k, a, b, Cx, Cy, cost_impl=impl,
-                                         **kw),
+        solver = repro.SparGWSolver(s=s, epsilon=1e-2, outer_iters=20,
+                                    inner_iters=50, cost_impl=impl)
+        sec, out = timed(
+            lambda k, solver=solver: repro.solve(problem, solver, key=k,
+                                                 validate=False),
             key, reps=max(reps // 2, 1))
         gw_times[impl] = sec
         record(f"spar_gw/n{n}/s{ratio}n/{impl}", sec * 1e6,
-               f"value={float(v):.5f}")
+               f"value={float(out.value):.5f}")
     base = gw_times["jnp"]
     record(f"spar_gw/n{n}/s{ratio}n/best_speedup",
            min(gw_times.values()) * 1e6,

@@ -36,3 +36,34 @@ def timed(fn, *args, reps: int = 1, warmup: bool = True):
 def live_device_bytes() -> int:
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize
                for a in jax.live_arrays())
+
+
+def bench_solver(name: str, n: int = 120, loss: str = "l2", reps: int = 3,
+                 dataset: str = "moon", **solver_kw):
+    """Benchmark any registered solver through the unified API.
+
+    One code path for every solver in the registry (`--solver` in run.py):
+    builds a problem from ``dataset``, instantiates the solver via its
+    ``default_config(n)`` (overridable with ``solver_kw``), and records
+    steady-state ``repro.solve`` wall time + value/convergence info.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    import repro
+    from benchmarks.datasets import DATASETS
+
+    a, b, Cx, Cy = map(jnp.asarray, DATASETS[dataset](n))
+    problem = repro.QuadraticProblem(repro.Geometry(Cx, a),
+                                     repro.Geometry(Cy, b), loss=loss)
+    solver = repro.get_solver(name).default_config(n)
+    if solver_kw:
+        solver = dataclasses.replace(solver, **solver_kw)
+    key = jax.random.PRNGKey(0)
+    sec, out = timed(lambda: repro.solve(problem, solver, key=key),
+                     reps=reps)
+    record(f"solve/{dataset}/{loss}/n{n}/{name}", sec * 1e6,
+           f"value={float(out.value):.5f};n_iters={int(out.n_iters)};"
+           f"converged={bool(out.converged)}")
+    return sec, out

@@ -1,13 +1,40 @@
-"""Benchmark runner — one function per paper table/figure.
+"""Benchmark runner — one function per paper table/figure, plus a
+registry-driven single-solver mode.
+
 Prints ``name,us_per_call,derived`` CSV (harness contract). Set
-REPRO_BENCH_FULL=1 for paper-scale sizes."""
+REPRO_BENCH_FULL=1 for paper-scale sizes.
+
+Modes:
+  python benchmarks/run.py                      # full paper suite
+  python benchmarks/run.py --solver spar_gw     # one registered solver
+  python benchmarks/run.py --solver all         # every registered solver
+(the --solver path benchmarks through repro.solve, so any solver added
+via @register_solver is benchmarkable with no further CLI work).
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def run_solver_mode(names, n: int, loss: str, reps: int) -> None:
+    import repro
+    from benchmarks.common import bench_solver
+
+    if names == ["all"]:
+        names = list(repro.available_solvers())
+    unknown = [x for x in names if x not in repro.available_solvers()]
+    if unknown:
+        raise SystemExit(
+            f"unknown solver(s) {unknown}; available: "
+            f"{', '.join(repro.available_solvers())}")
+    print("name,us_per_call,derived")
+    for name in names:
+        bench_solver(name, n=n, loss=loss, reps=reps)
+
+
+def run_full_suite() -> None:
     from benchmarks import (
         bench_fig2,
         bench_fig3_ugw,
@@ -39,6 +66,22 @@ def main() -> None:
     if failures:
         print("FAILED:", failures, file=sys.stderr)
         raise SystemExit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--solver", nargs="+", default=None, metavar="NAME",
+                    help="benchmark the named registered solver(s) through "
+                         "repro.solve ('all' = every registered solver); "
+                         "omit for the full paper suite")
+    ap.add_argument("--n", type=int, default=120, help="problem size")
+    ap.add_argument("--loss", default="l2", help="ground loss")
+    ap.add_argument("--reps", type=int, default=3, help="timing reps")
+    args = ap.parse_args()
+    if args.solver:
+        run_solver_mode(args.solver, args.n, args.loss, args.reps)
+    else:
+        run_full_suite()
 
 
 if __name__ == "__main__":

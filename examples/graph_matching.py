@@ -19,21 +19,25 @@ from benchmarks.bench_tables23_graphs import (
     rand_index,
     spectral_clustering,
 )
-from repro.core import spar_gw
+import repro
 
 graphs, labels = make_corpus(n_per_class=4, n_nodes=30)
 reprs = [graph_repr(g) for g in graphs]
 N = len(graphs)
 print(f"{N} graphs, 3 families (SBM-2, SBM-3, Barabási–Albert)")
 
+# One solver config reused across every pair; the problem carries the data.
+solver = repro.SparGWSolver(s=8 * 30, epsilon=1e-2, outer_iters=8,
+                            inner_iters=20, tol=1e-5)
+
 D = np.zeros((N, N))
 for i, j in itertools.combinations(range(N), 2):
     Ai, ai = reprs[i]
     Aj, aj = reprs[j]
-    v, _ = spar_gw(jax.random.PRNGKey(i * N + j), ai, aj, Ai, Aj,
-                   s=8 * 30, loss="l1", epsilon=1e-2, outer_iters=8,
-                   inner_iters=20)
-    D[i, j] = D[j, i] = max(float(v), 0.0)
+    problem = repro.QuadraticProblem(repro.Geometry(Ai, ai),
+                                     repro.Geometry(Aj, aj), loss="l1")
+    out = repro.solve(problem, solver, key=jax.random.PRNGKey(i * N + j))
+    D[i, j] = D[j, i] = max(float(out.value), 0.0)
 
 gamma = np.median(D[D > 0])
 S = np.exp(-D / gamma)

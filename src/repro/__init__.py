@@ -1,0 +1,36 @@
+"""Importance-sparsified Gromov-Wasserstein distances in JAX.
+
+Public API: build a :class:`~repro.QuadraticProblem` from two
+:class:`~repro.Geometry` objects and call :func:`repro.solve` with a
+solver config. The per-variant functions in ``repro.core`` (``spar_gw``,
+``gw_dense``, ...) remain available as deprecation shims over this layer.
+"""
+from repro.api import (
+    DenseGWSolver,
+    Geometry,
+    GridCoupling,
+    GridGWSolver,
+    GWOutput,
+    QuadraticProblem,
+    SparGWSolver,
+    SparseCoupling,
+    available_solvers,
+    get_solver,
+    register_solver,
+    solve,
+)
+
+__all__ = [
+    "Geometry",
+    "QuadraticProblem",
+    "GWOutput",
+    "SparseCoupling",
+    "GridCoupling",
+    "solve",
+    "SparGWSolver",
+    "DenseGWSolver",
+    "GridGWSolver",
+    "get_solver",
+    "register_solver",
+    "available_solvers",
+]

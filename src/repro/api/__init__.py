@@ -1,0 +1,35 @@
+"""Unified Problem/Solver/Output API (DESIGN.md §"API layer").
+
+Pytree-native layer over the paper's solver family: build a
+``QuadraticProblem`` from two ``Geometry``s, pick a solver config (or a
+registry name), and call ``repro.solve`` — every variant (GW, entropic,
+fused, unbalanced, sparse, grid) returns the same structured ``GWOutput``
+and composes with ``jax.jit`` / ``jax.vmap``.
+"""
+from repro.api.geometry import Geometry
+from repro.api.output import GridCoupling, GWOutput, SparseCoupling
+from repro.api.problem import QuadraticProblem
+from repro.api.solve import solve
+from repro.api.solvers import (
+    DenseGWSolver,
+    GridGWSolver,
+    SparGWSolver,
+    available_solvers,
+    get_solver,
+    register_solver,
+)
+
+__all__ = [
+    "Geometry",
+    "QuadraticProblem",
+    "GWOutput",
+    "SparseCoupling",
+    "GridCoupling",
+    "solve",
+    "SparGWSolver",
+    "DenseGWSolver",
+    "GridGWSolver",
+    "get_solver",
+    "register_solver",
+    "available_solvers",
+]

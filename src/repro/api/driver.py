@@ -1,0 +1,65 @@
+"""Shared tolerance-aware outer-loop driver for all GW solvers.
+
+Replaces the fixed-length ``lax.scan`` outer loops: a bounded
+``lax.while_loop`` that stops early once the coupling reaches a relative
+ℓ1 fixed point, while recording the per-iteration marginal-violation
+error into a fixed-size buffer (so the result has static shapes and the
+whole solve stays ``jit``/``vmap``-compatible).
+
+vmap semantics: ``lax.while_loop`` under ``vmap`` keeps stepping every
+lane until *all* lanes are done, so the body freezes finished lanes with
+``where(done, old, new)`` — a lane that converged at iteration k returns
+exactly its iteration-k state no matter how long its batch peers run.
+
+``tol <= 0`` reproduces the legacy fixed-budget behavior exactly: the
+early-stop predicate is compiled out, the loop always runs the full
+``max_iters``, and ``converged`` stays False.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_TINY = 1e-30
+
+
+def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
+             tol: float) -> Tuple:
+    """Iterate ``T <- step_fn(T)`` up to ``max_iters`` times.
+
+    step_fn — one outer PGA/entropic step (Sinkhorn projection included)
+    err_fn  — diagnostic recorded per iteration (marginal ℓ1 violation)
+    tol     — stop when sum|T_new - T| / sum|T| <= tol (static float)
+
+    Returns ``(T, errors, n_iters, converged)`` with ``errors`` of static
+    shape (max_iters,), NaN-padded past ``n_iters``.
+    """
+    errs0 = jnp.full((max_iters,), jnp.nan, jnp.float32)
+    if max_iters <= 0:
+        return T0, errs0, jnp.int32(0), jnp.bool_(False)
+
+    def cond(state):
+        i, _, _, done = state
+        return (i < max_iters) & jnp.logical_not(done)
+
+    def body(state):
+        i, T, errs, done = state
+        T_new = step_fn(T)
+        err = err_fn(T_new).astype(jnp.float32)
+        # freeze lanes that were already done (batched-while masking)
+        errs = jnp.where(done, errs, errs.at[i].set(err))
+        T_out = jax.tree.map(lambda new, old: jnp.where(done, old, new),
+                             T_new, T)
+        i_out = jnp.where(done, i, i + 1)
+        if tol > 0:                    # tol is static: predicate compiled out
+            delta = (jnp.sum(jnp.abs(T_new - T))
+                     / jnp.maximum(jnp.sum(jnp.abs(T)), _TINY))
+            done = done | (delta <= tol)
+        return i_out, T_out, errs, done
+
+    state0 = (jnp.int32(0), T0, errs0, jnp.bool_(False))
+    n_iters, T, errors, converged = lax.while_loop(cond, body, state0)
+    return T, errors, n_iters, converged

@@ -1,0 +1,69 @@
+"""``Geometry`` — one side of a (fused) GW problem.
+
+OTT-style separation: a Geometry owns the *space* (pairwise ground cost,
+marginal weights, optional node features); the QuadraticProblem owns the
+*coupling task* between two geometries; solvers own the *algorithm*.
+"""
+from __future__ import annotations
+
+from dataclasses import InitVar, dataclass
+from typing import Any, Optional
+
+from repro.api.pytree import is_concrete, register_pytree_dataclass
+
+
+def _shape(x):
+    return getattr(x, "shape", None)
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Cost matrix + marginal (+ optional features) for one space.
+
+    cost     — (n, n) pairwise ground cost/similarity matrix
+    weights  — (n,) marginal weights (must sum to 1 in balanced problems;
+               checked at the QuadraticProblem boundary)
+    features — optional (n, d) node features; when both geometries carry
+               features and the problem has no explicit ``M``, the fused
+               linear term is the pairwise squared euclidean feature cost
+    validate — init-only flag; ``False`` skips all checks (for callers
+               building geometries inside ``jit``-traced code). Value
+               checks are auto-skipped for tracer inputs either way.
+    """
+    cost: Any
+    weights: Any
+    features: Optional[Any] = None
+    validate: InitVar[bool] = True
+
+    def __post_init__(self, validate: bool = True):
+        if validate:
+            self.check()
+
+    def check(self):
+        """Shape checks (tracer-safe) + value checks (concrete inputs only)."""
+        c, w = self.cost, self.weights
+        cs, ws = _shape(c), _shape(w)
+        if cs is None or len(cs) != 2 or cs[0] != cs[1]:
+            raise ValueError(
+                f"Geometry.cost must be a square (n, n) matrix, got shape {cs}")
+        if ws is None or len(ws) != 1 or ws[0] != cs[0]:
+            raise ValueError(
+                f"Geometry.weights must have shape ({cs[0]},) to match cost, "
+                f"got shape {ws}")
+        if self.features is not None:
+            fs = _shape(self.features)
+            if fs is None or len(fs) != 2 or fs[0] != cs[0]:
+                raise ValueError(
+                    f"Geometry.features must have shape ({cs[0]}, d) to match "
+                    f"cost, got shape {fs}")
+        if is_concrete(w):
+            import numpy as np
+            if float(np.min(np.asarray(w))) < 0.0:
+                raise ValueError("Geometry.weights must be non-negative")
+
+    @property
+    def n(self) -> int:
+        return self.cost.shape[0]
+
+
+register_pytree_dataclass(Geometry, ("cost", "weights", "features"))

@@ -1,0 +1,72 @@
+"""Structured solver output — ``GWOutput`` + coupling containers.
+
+Every solver returns the same shape of result regardless of variant, so
+downstream code (benchmarks, batching, serving) never unpacks per-solver
+tuples. All containers are pytrees: a ``vmap``-batched solve returns one
+``GWOutput`` whose leaves carry the batch dimension.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.api.pytree import register_pytree_dataclass
+
+
+class SparseCoupling(NamedTuple):
+    """COO coupling on a sampled support of size s.
+
+    Duplicate (row, col) pairs are legitimate parallel entries of the
+    importance-sampling estimator; ``todense`` merges them by summation
+    (matching the segment-sum Sinkhorn semantics).
+    """
+    rows: Any   # (s,) int
+    cols: Any   # (s,) int
+    vals: Any   # (s,) float
+
+    def todense(self, m: int, n: int):
+        Z = jnp.zeros((m, n), self.vals.dtype)
+        return Z.at[self.rows, self.cols].add(self.vals)
+
+
+class GridCoupling(NamedTuple):
+    """Factorized (grid) coupling: block[k, l] sits at (rows[k], cols[l])."""
+    rows: Any    # (s_r,) int
+    cols: Any    # (s_c,) int
+    block: Any   # (s_r, s_c) float
+
+    def todense(self, m: int, n: int):
+        Z = jnp.zeros((m, n), self.block.dtype)
+        return Z.at[self.rows[:, None], self.cols[None, :]].add(self.block)
+
+
+@dataclass(frozen=True)
+class GWOutput:
+    """Result of one GW solve.
+
+    value     — scalar objective estimate (GW/FGW/UGW value)
+    coupling  — (m, n) dense array, ``SparseCoupling``, or ``GridCoupling``
+    errors    — (outer_iters,) marginal-violation ℓ1 error recorded after
+                each outer iteration; NaN beyond ``n_iters``
+    converged — True iff the outer loop hit the tolerance before the bound
+                (always False when the solver ran with ``tol=0``)
+    n_iters   — number of outer iterations actually taken
+    """
+    value: Any
+    coupling: Any
+    errors: Any
+    converged: Any
+    n_iters: Any
+
+    def coupling_dense(self, m: int, n: int):
+        """The coupling as a dense (m, n) matrix, whatever its storage."""
+        if hasattr(self.coupling, "todense"):
+            return self.coupling.todense(m, n)
+        return self.coupling
+
+
+register_pytree_dataclass(
+    GWOutput,
+    data_fields=("value", "coupling", "errors", "converged", "n_iters"))

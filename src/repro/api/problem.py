@@ -1,0 +1,155 @@
+"""``QuadraticProblem`` — the task of coupling two geometries.
+
+One problem class covers the whole family the paper treats as separate
+algorithms: plain GW (no extras), fused GW (``M`` or feature geometries +
+``fused_penalty``), and unbalanced GW (``lam``). Solvers dispatch on the
+problem's *structure* — which optional fields are set — so variant
+selection is part of the pytree treedef and stable under ``jit``/``vmap``.
+"""
+from __future__ import annotations
+
+from dataclasses import InitVar, dataclass
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.api.geometry import Geometry
+from repro.api.pytree import is_concrete, register_pytree_dataclass
+
+_MASS_ATOL = 1e-4
+
+
+@dataclass(frozen=True)
+class QuadraticProblem:
+    """A (fused/unbalanced) quadratic OT problem between two geometries.
+
+    geom_x, geom_y — the two spaces (cost + marginal [+ features])
+    loss           — ground-loss name ("l2", "l1", "kl"); static
+    fused_penalty  — α ∈ (0, 1]: weight of the quadratic term in fused GW,
+                     C_fu = α·L⊗T + (1-α)·M. Required iff a linear term is
+                     present (explicit ``M`` or features on both geometries)
+    M              — optional (m, n) linear cost for fused GW; when absent
+                     but both geometries carry features, M is derived as the
+                     pairwise squared euclidean feature distance
+    lam            — optional λ > 0: unbalanced marginal-KL strength
+                     (None → balanced problem, weights must sum to 1)
+    validate       — init-only flag; ``False`` skips all checks (callers
+                     constructing problems inside traced code). Value checks
+                     are auto-skipped for tracer inputs either way.
+    """
+    geom_x: Geometry
+    geom_y: Geometry
+    loss: str = "l2"
+    fused_penalty: Optional[Any] = None
+    M: Optional[Any] = None
+    lam: Optional[Any] = None
+    validate: InitVar[bool] = True
+
+    def __post_init__(self, validate: bool = True):
+        if validate:
+            self.check()
+
+    # -- validation ---------------------------------------------------------
+
+    def check(self):
+        """Validate shapes always, values only when inputs are concrete.
+
+        Raises ValueError with an actionable message; jit-traced callers
+        that want zero overhead pass ``validate=False`` instead. Marks the
+        instance as validated so ``solve(validate=True)`` doesn't pay the
+        concrete-value device syncs twice per call.
+        """
+        self.geom_x.check()
+        self.geom_y.check()
+        m, n = self.shape
+
+        from repro.core import ground_cost as gc
+        try:
+            gc.get_loss(self.loss)
+        except KeyError:
+            raise ValueError(
+                f"unknown ground loss {self.loss!r} (known: l1, l2, kl)"
+            ) from None
+
+        if self.M is not None:
+            ms = getattr(self.M, "shape", None)
+            if ms != (m, n):
+                raise ValueError(
+                    f"M must have shape ({m}, {n}) = (len(geom_x), "
+                    f"len(geom_y)), got {ms}")
+        has_lin = self.M is not None or (
+            self.geom_x.features is not None
+            and self.geom_y.features is not None)
+        if has_lin and self.fused_penalty is None:
+            raise ValueError(
+                "a linear term (M or features on both geometries) requires "
+                "fused_penalty=α to be set (C_fu = α·L⊗T + (1-α)·M)")
+        if self.fused_penalty is not None:
+            if not has_lin:
+                raise ValueError(
+                    "fused_penalty set but no linear term: provide M or put "
+                    "features on both geometries")
+            if is_concrete(self.fused_penalty):
+                alpha = float(self.fused_penalty)
+                if not 0.0 < alpha <= 1.0:
+                    raise ValueError(
+                        f"fused_penalty must lie in (0, 1], got {alpha}")
+        if (self.geom_x.features is not None) != (
+                self.geom_y.features is not None) and self.M is None:
+            raise ValueError(
+                "features must be set on both geometries (or neither) "
+                "when no explicit M is given")
+        if self.lam is not None and is_concrete(self.lam):
+            if float(self.lam) <= 0.0:
+                raise ValueError(f"lam must be > 0, got {float(self.lam)}")
+        if self.lam is None:
+            # balanced problem: marginals must be probability vectors
+            for name, w in (("geom_x", self.geom_x.weights),
+                            ("geom_y", self.geom_y.weights)):
+                if is_concrete(w):
+                    total = float(jnp.sum(w))
+                    if abs(total - 1.0) > _MASS_ATOL:
+                        raise ValueError(
+                            f"{name}.weights must sum to 1 for a balanced "
+                            f"problem (got {total:.6f}); normalize them or "
+                            f"pass lam=... for an unbalanced problem")
+        object.__setattr__(self, "_validated", True)
+        return self
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def shape(self):
+        return (self.geom_x.n, self.geom_y.n)
+
+    @property
+    def is_fused(self) -> bool:
+        return self.M is not None or (
+            self.geom_x.features is not None
+            and self.geom_y.features is not None)
+
+    @property
+    def is_unbalanced(self) -> bool:
+        return self.lam is not None
+
+    # -- fused linear term --------------------------------------------------
+
+    def linear_cost_dense(self):
+        """The (m, n) linear cost M (explicit, or derived from features)."""
+        if self.M is not None:
+            return self.M
+        fx, fy = self.geom_x.features, self.geom_y.features
+        return jnp.sum((fx[:, None, :] - fy[None, :, :]) ** 2, axis=-1)
+
+    def linear_cost_at(self, rows, cols):
+        """M gathered on a COO support — O(s·d), never materializes (m, n)."""
+        if self.M is not None:
+            return self.M[rows, cols]
+        fx, fy = self.geom_x.features, self.geom_y.features
+        return jnp.sum((fx[rows] - fy[cols]) ** 2, axis=-1)
+
+
+register_pytree_dataclass(
+    QuadraticProblem,
+    data_fields=("geom_x", "geom_y", "fused_penalty", "M", "lam"),
+    meta_fields=("loss",))

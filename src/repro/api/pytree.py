@@ -1,0 +1,45 @@
+"""Pytree registration for the API dataclasses.
+
+The API dataclasses validate their inputs in ``__init__``. JAX
+transformations unflatten pytrees with tracers (and occasionally with
+sentinel objects that have no ``.shape``), so unflattening must *never*
+re-run the constructor. ``register_pytree_dataclass`` therefore installs a
+flatten/unflatten pair that rebuilds instances with ``object.__new__`` +
+``setattr``, bypassing ``__init__``/``__post_init__`` entirely.
+
+``data_fields`` become pytree leaves (traced, batched, donated, ...);
+``meta_fields`` become hashable aux data (part of the tree structure, so a
+change in a meta field retraces jitted callees — use them for knobs that
+select code paths).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def register_pytree_dataclass(cls, data_fields: Sequence[str],
+                              meta_fields: Sequence[str] = ()):
+    data_fields = tuple(data_fields)
+    meta_fields = tuple(meta_fields)
+
+    def flatten(obj):
+        return (tuple(getattr(obj, f) for f in data_fields),
+                tuple(getattr(obj, f) for f in meta_fields))
+
+    def unflatten(meta, data):
+        obj = object.__new__(cls)
+        for f, v in zip(data_fields, data):
+            object.__setattr__(obj, f, v)
+        for f, v in zip(meta_fields, meta):
+            object.__setattr__(obj, f, v)
+        return obj
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def is_concrete(x) -> bool:
+    """True when ``x`` carries a concrete value (not a JAX tracer)."""
+    return not isinstance(x, jax.core.Tracer)

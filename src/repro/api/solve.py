@@ -1,0 +1,47 @@
+"""``repro.solve`` — the single front door for every GW variant.
+
+    out = repro.solve(problem, solver=SparGWSolver(s=16 * n), key=key)
+
+``problem`` and ``solver`` are pytrees and the call is jitted internally,
+so repeated solves with the same structure (shapes + static knobs) reuse
+the compiled executable, and the whole call nests under user ``jax.jit``
+and ``jax.vmap`` transforms — batching a stack of problems over keys is
+
+    batched = jax.vmap(lambda p, k: repro.solve(p, solver=s, key=k))
+    out = batched(stacked_problems, jax.random.split(key, B))
+
+where ``stacked_problems = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+
+from repro.api.problem import QuadraticProblem
+from repro.api.solvers import get_solver
+
+
+@jax.jit
+def _solve_jit(problem, solver, key):
+    return solver.run(problem, key)
+
+
+def solve(problem: QuadraticProblem, solver: Union[str, object] = "spar_gw",
+          key: Optional[jax.Array] = None, validate: bool = True):
+    """Solve a QuadraticProblem; returns a structured ``GWOutput``.
+
+    solver   — a solver config instance, or a registry name ("spar_gw",
+               "dense_gw", "grid_gw", ...) which selects that solver's
+               ``default_config`` for the problem size
+    key      — PRNG key; required by sampling solvers, ignored by dense
+    validate — run the problem's boundary checks if they haven't run yet
+               (construction with validate=True already marks the problem
+               validated; value checks are auto-skipped under tracing;
+               pass False for zero overhead)
+    """
+    if isinstance(solver, str):
+        solver = get_solver(solver).default_config(problem.geom_x.n)
+    if validate and not getattr(problem, "_validated", False):
+        problem.check()
+    return _solve_jit(problem, solver, key)

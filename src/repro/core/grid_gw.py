@@ -19,15 +19,12 @@ duplicates (matching the COO segment-sum semantics).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import ground_cost as gc
-from repro.core import sampling
-from repro.core.sinkhorn import sinkhorn, sinkhorn_log
+from repro.core.sinkhorn import sinkhorn
 
 
 def grid_cost(CxR, CyC, T, loss: str, use_kernel: bool = False,
@@ -78,47 +75,27 @@ def _dedup_marginal(idx, full_weight, n_total):
     return full_weight[idx] / counts[idx]
 
 
-@partial(jax.jit,
-         static_argnames=("s_r", "s_c", "loss", "reg", "outer_iters",
-                          "inner_iters", "use_kernel", "stable"))
 def grid_spar_gw(key, a, b, Cx, Cy, s_r: int, s_c: int, loss: str = "l2",
                  reg: str = "prox", epsilon: float = 1e-2,
                  outer_iters: int = 20, inner_iters: int = 50,
                  shrink: float = 0.0, use_kernel: bool = False,
                  stable: bool = True):
-    """Grid-structured SPAR-GW. Returns (gw_estimate, (R, C, T_block))."""
-    m, n = Cx.shape[0], Cy.shape[0]
-    probs = sampling.balanced_probs(a, b, shrink)
-    R, C = sampling.sample_grid(key, probs, s_r, s_c)
-    CxR = Cx[R][:, R]                                    # (s_r, s_r) — once
-    CyC = Cy[C][:, C]                                    # (s_c, s_c) — once
-    s = s_r * s_c
-    w = 1.0 / (s * probs.pa[R][:, None] * probs.pb[C][None, :])
-    aR = _dedup_marginal(R, a, m)
-    bC = _dedup_marginal(C, b, n)
-    # normalize to unit mass (covered-support renormalization; DESIGN.md §4)
-    aR = aR / aR.sum()
-    bC = bC / bC.sum()
-    T = aR[:, None] * bC[None, :]
+    """Grid-structured SPAR-GW (shim). Returns (gw_estimate, (R, C, T_block)).
 
-    def outer(T, _):
-        Cmat = grid_cost(CxR, CyC, T, loss, use_kernel)
-        if stable:
-            logK = -Cmat / epsilon + jnp.log(w)
-            if reg == "prox":
-                logK = logK + jnp.log(jnp.maximum(T, 1e-38))
-            T_new = sinkhorn_log(aR, bC, logK, inner_iters)
-            return T_new, None
-        Cs = Cmat - jnp.min(Cmat)
-        K = jnp.exp(-Cs / epsilon) * w
-        if reg == "prox":
-            K = K * T
-        T_new = sinkhorn(aR, bC, K, inner_iters)
-        return T_new, None
-
-    T, _ = lax.scan(outer, T, None, length=outer_iters)
-    value = jnp.sum(T * grid_cost(CxR, CyC, T, loss, use_kernel))
-    return value, (R, C, T)
+    The solver loop lives in ``repro.api.solvers.GridGWSolver``.
+    """
+    from repro.api import Geometry, GridGWSolver, QuadraticProblem, solve
+    from repro.core.spar_gw import _warn_deprecated
+    _warn_deprecated("grid_spar_gw")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, validate=False)
+    solver = GridGWSolver(s_r=s_r, s_c=s_c, reg=reg, epsilon=epsilon,
+                          outer_iters=outer_iters, inner_iters=inner_iters,
+                          shrink=shrink, use_kernel=use_kernel, stable=stable)
+    out = solve(problem, solver, key=key, validate=False)
+    c = out.coupling
+    return out.value, (c.rows, c.cols, c.block)
 
 
 def grid_spar_gw_differentiable(a, b, CxR, CyC, aR, bC, w, loss: str,

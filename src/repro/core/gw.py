@@ -1,20 +1,17 @@
-"""Dense GW solvers — the paper's Algorithm 1 (EGW / PGA-GW) and helpers.
+"""Dense GW cost assembly + legacy Algorithm 1 entry points (shims).
 
-These are the baselines the paper compares against (Peyré et al. 2016;
-Xu et al. 2019b). They are O(n^2 m + m^2 n) per iteration for decomposable
-ground costs and O(m^2 n^2) (chunked) for arbitrary costs.
+`dense_cost` / `gw_objective` are the shared primitives (O(n^2 m + m^2 n)
+per iteration for decomposable ground costs, chunked O(m^2 n^2) for
+arbitrary costs). The solver loops live in
+``repro.api.solvers.DenseGWSolver``; `gw_dense` / `fgw_dense` / `egw` /
+`pga_gw` are deprecation shims with the original signatures.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import ground_cost as gc
-from repro.core.sinkhorn import sinkhorn, sinkhorn_log
 
 
 def dense_cost(Cx, Cy, T, loss: str, row_chunk: int = 8):
@@ -52,37 +49,25 @@ def gw_objective(Cx, Cy, T, loss: str, row_chunk: int = 8):
     return jnp.sum(dense_cost(Cx, Cy, T, loss, row_chunk) * T)
 
 
-@partial(jax.jit, static_argnames=("loss", "reg", "outer_iters", "inner_iters",
-                                   "stable"))
 def gw_dense(a, b, Cx, Cy, loss: str = "l2", reg: str = "prox",
              epsilon: float = 1e-2, outer_iters: int = 20,
              inner_iters: int = 50, stable: bool = True):
-    """Algorithm 1: EGW (reg='ent') or PGA-GW (reg='prox').
+    """Algorithm 1 (shim): EGW (reg='ent') or PGA-GW (reg='prox').
 
     ``stable=True`` runs the Sinkhorn projection in log domain (required for
     small ε / proximal kernels in fp32); ``stable=False`` is the plain-domain
     algorithm exactly as written in the paper. Returns (gw_value, T).
     """
-    T0 = a[:, None] * b[None, :]
-
-    def outer(T, _):
-        C = dense_cost(Cx, Cy, T, loss)
-        if stable:
-            logK = -C / epsilon
-            if reg == "prox":
-                logK = logK + jnp.log(jnp.maximum(T, 1e-38))
-            T_new = sinkhorn_log(a, b, logK, inner_iters)
-        else:
-            Cs = C - jnp.min(C)          # constant shift — Sinkhorn-invariant
-            K = jnp.exp(-Cs / epsilon)
-            if reg == "prox":
-                K = K * T
-            T_new = sinkhorn(a, b, K, inner_iters)
-        return T_new, None
-
-    T, _ = lax.scan(outer, T0, None, length=outer_iters)
-    val = gw_objective(Cx, Cy, T, loss)
-    return val, T
+    from repro.api import DenseGWSolver, Geometry, QuadraticProblem, solve
+    from repro.core.spar_gw import _warn_deprecated
+    _warn_deprecated("gw_dense")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, validate=False)
+    solver = DenseGWSolver(reg=reg, epsilon=epsilon, outer_iters=outer_iters,
+                           inner_iters=inner_iters, stable=stable)
+    out = solve(problem, solver, validate=False)
+    return out.value, out.coupling
 
 
 def egw(a, b, Cx, Cy, **kw):
@@ -95,30 +80,21 @@ def pga_gw(a, b, Cx, Cy, **kw):
     return gw_dense(a, b, Cx, Cy, **kw)
 
 
-@partial(jax.jit, static_argnames=("loss", "reg", "outer_iters", "inner_iters",
-                                   "stable"))
 def fgw_dense(a, b, Cx, Cy, M, alpha: float = 0.6, loss: str = "l2",
               reg: str = "prox", epsilon: float = 1e-2, outer_iters: int = 20,
               inner_iters: int = 50, stable: bool = True):
-    """Dense fused GW (appendix A baseline): C_fu = α L⊗T + (1-α) M."""
-    T0 = a[:, None] * b[None, :]
-
-    def outer(T, _):
-        C = alpha * dense_cost(Cx, Cy, T, loss) + (1 - alpha) * M
-        if stable:
-            logK = -C / epsilon
-            if reg == "prox":
-                logK = logK + jnp.log(jnp.maximum(T, 1e-38))
-            return sinkhorn_log(a, b, logK, inner_iters), None
-        Cs = C - jnp.min(C)
-        K = jnp.exp(-Cs / epsilon)
-        if reg == "prox":
-            K = K * T
-        return sinkhorn(a, b, K, inner_iters), None
-
-    T, _ = lax.scan(outer, T0, None, length=outer_iters)
-    val = alpha * gw_objective(Cx, Cy, T, loss) + (1 - alpha) * jnp.sum(M * T)
-    return val, T
+    """Dense fused GW (shim; appendix A baseline): C_fu = α L⊗T + (1-α) M."""
+    from repro.api import DenseGWSolver, Geometry, QuadraticProblem, solve
+    from repro.core.spar_gw import _warn_deprecated
+    _warn_deprecated("fgw_dense")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, fused_penalty=alpha, M=M,
+                               validate=False)
+    solver = DenseGWSolver(reg=reg, epsilon=epsilon, outer_iters=outer_iters,
+                           inner_iters=inner_iters, stable=stable)
+    out = solve(problem, solver, validate=False)
+    return out.value, out.coupling
 
 
 def entropic_gw_value(Cx, Cy, T, loss: str, epsilon: float):

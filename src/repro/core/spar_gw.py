@@ -1,36 +1,22 @@
-"""SPAR-GW — Algorithm 2 of the paper (paper-faithful COO implementation).
+"""SPAR-GW / SPAR-FGW — legacy entry points (deprecation shims).
 
-Sparse coupling supported on ``s`` importance-sampled index pairs
-(p_ij ∝ sqrt(a_i b_j), eq. 5). Per-iteration work is O(s^2) cost assembly +
-O(H s) sparse Sinkhorn. Static shapes throughout (TPU/JAX requirement):
-``s`` is fixed and duplicates in S are legitimate parallel entries (the
-segment-sum Sinkhorn merges them per row/col, preserving marginals).
-
-The O(s²) cost assembly routes through the ``repro.kernels.spar_cost``
-family via ``cost_impl`` ∈ {"auto", "jnp", "pallas", "materialized"}:
-the kernels compute the affine form L-matvec(t) + off, so the whole
-log-kernel logK = -(α/ε) L@T̃ + off (off folding log w, log T̃ and the FGW
-linear term) is formed in one fused pass per outer iteration. SPAR-GW,
-SPAR-FGW (and SPAR-UGW in spar_ugw.py) share the same outer step,
-parameterized by the linear term. See DESIGN.md §3.
+The solver implementations live in the unified API layer
+(``repro.api.solvers.SparGWSolver``, driven by the shared tolerance-aware
+outer loop in ``repro.api.driver``); ``repro.solve`` is the front door.
+These functions keep the original positional signatures and bare-tuple
+returns for existing callers and return values bitwise-identical to the
+corresponding ``repro.solve`` call (asserted in tests/test_api.py).
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from repro.core import sampling
-from repro.core.sinkhorn import sparse_sinkhorn, sparse_sinkhorn_logdomain
+import warnings
 
 
-def _cost_factory():
-    # deferred: kernels.spar_cost.ref needs core.ground_cost, so a
-    # module-level import here would be circular
-    from repro.kernels.spar_cost.ops import make_spar_cost_fn
-    return make_spar_cost_fn
+def _warn_deprecated(name: str):
+    warnings.warn(
+        f"repro.core.{name} is a deprecation shim; build a QuadraticProblem "
+        f"and call repro.solve(...) instead (see DESIGN.md §'API layer')",
+        DeprecationWarning, stacklevel=3)
 
 
 def spar_cost(Cx, Cy, rows, cols, tvals, loss: str, chunk: int = 1024):
@@ -39,94 +25,45 @@ def spar_cost(Cx, Cy, rows, cols, tvals, loss: str, chunk: int = 1024):
     return spar_cost_ref(Cx, Cy, rows, cols, tvals, loss, chunk)
 
 
-def _pga_step(T, cost_fn, a, b, rows, cols, w, logw, m: int, n: int,
-              epsilon, inner_iters: int, reg: str, stable: bool,
-              alpha=1.0, lin=0.0):
-    """One proximal/entropic PGA outer step on the COO support.
-
-    Shared by SPAR-GW (α = 1, lin = 0) and SPAR-FGW (lin = M̃): the
-    iteration cost is C = α·(L @ T̃) + (1-α)·lin, and in the stable path
-    the fused cost_fn writes logK = -C/ε + log w (+ log T̃) directly.
-    """
-    if stable:
-        off = logw - ((1.0 - alpha) / epsilon) * lin
-        if reg == "prox":
-            off = off + jnp.log(jnp.maximum(T, 1e-38))
-        logK = cost_fn((-alpha / epsilon) * T, off)
-        return sparse_sinkhorn_logdomain(a, b, rows, cols, logK, m, n,
-                                         inner_iters)
-    C = cost_fn(alpha * T, (1.0 - alpha) * lin)
-    Cs = C - jnp.min(C)          # constant shift — Sinkhorn-invariant
-    K = jnp.exp(-Cs / epsilon) * w
-    if reg == "prox":
-        K = K * T
-    return sparse_sinkhorn(a, b, rows, cols, K, m, n, inner_iters)
-
-
-@partial(jax.jit,
-         static_argnames=("s", "loss", "reg", "outer_iters", "inner_iters",
-                          "cost_chunk", "stable", "cost_impl"))
 def spar_gw(key, a, b, Cx, Cy, s: int, loss: str = "l2", reg: str = "prox",
             epsilon: float = 1e-2, outer_iters: int = 20,
             inner_iters: int = 50, shrink: float = 0.0,
             cost_chunk: int = 1024, stable: bool = True,
             cost_impl: str = "auto"):
-    """Algorithm 2. Returns (gw_estimate, (rows, cols, coupling_values)).
-
-    reg='prox' uses the Bregman proximal term KL(T‖T^(r)) (PGA);
-    reg='ent' uses the entropic regularizer H(T). ``stable=True`` runs the
-    sparse Sinkhorn in log domain (fp32-safe for small ε). ``cost_impl``
-    selects the O(s²) cost-assembly backend (see module docstring).
-    """
-    m, n = Cx.shape[0], Cy.shape[0]
-    probs = sampling.balanced_probs(a, b, shrink)
-    rows, cols = sampling.sample_pairs(key, probs, s)
-    p = probs.pair_prob(rows, cols)                     # (s,)
-    w = 1.0 / (s * p)                                   # importance adjustment
-    T = a[rows] * b[cols]                               # step 4 init on S
-    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
-                              chunk=cost_chunk)
-    step = partial(_pga_step, cost_fn=cost_fn, a=a, b=b, rows=rows,
-                   cols=cols, w=w, logw=jnp.log(w), m=m, n=n,
-                   epsilon=epsilon, inner_iters=inner_iters, reg=reg,
-                   stable=stable)
-
-    T, _ = lax.scan(lambda T, _: (step(T), None), T, None,
-                    length=outer_iters)
-    # Step 8: plug-in objective on the sparse support, O(s²).
-    value = jnp.sum(T * cost_fn(T))
-    return value, (rows, cols, T)
+    """Algorithm 2 (shim). Returns (gw_estimate, (rows, cols, vals))."""
+    from repro.api import Geometry, QuadraticProblem, SparGWSolver, solve
+    _warn_deprecated("spar_gw")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, validate=False)
+    solver = SparGWSolver(s=s, reg=reg, epsilon=epsilon,
+                          outer_iters=outer_iters, inner_iters=inner_iters,
+                          shrink=shrink, cost_chunk=cost_chunk,
+                          stable=stable, cost_impl=cost_impl)
+    out = solve(problem, solver, key=key, validate=False)
+    c = out.coupling
+    return out.value, (c.rows, c.cols, c.vals)
 
 
-@partial(jax.jit,
-         static_argnames=("s", "loss", "reg", "outer_iters", "inner_iters",
-                          "cost_chunk", "stable", "cost_impl"))
 def spar_fgw(key, a, b, Cx, Cy, M, s: int, alpha: float = 0.6,
              loss: str = "l2", reg: str = "prox", epsilon: float = 1e-2,
              outer_iters: int = 20, inner_iters: int = 50,
              shrink: float = 0.0, cost_chunk: int = 1024,
              stable: bool = True, cost_impl: str = "auto"):
-    """SPAR-FGW — Algorithm 4 (appendix A). Fused GW with feature matrix M.
+    """SPAR-FGW — Algorithm 4 (shim). Fused GW with feature matrix M.
 
-    C̃_fu(T̃) = α Σ L̃ T̃ + (1-α) M̃ on the sampled support.
     Returns (fgw_estimate, (rows, cols, coupling_values)).
     """
-    m, n = Cx.shape[0], Cy.shape[0]
-    probs = sampling.balanced_probs(a, b, shrink)
-    rows, cols = sampling.sample_pairs(key, probs, s)
-    p = probs.pair_prob(rows, cols)
-    w = 1.0 / (s * p)
-    Ms = M[rows, cols]                                  # M̃ on S
-    T = a[rows] * b[cols]
-    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
-                              chunk=cost_chunk)
-    step = partial(_pga_step, cost_fn=cost_fn, a=a, b=b, rows=rows,
-                   cols=cols, w=w, logw=jnp.log(w), m=m, n=n,
-                   epsilon=epsilon, inner_iters=inner_iters, reg=reg,
-                   stable=stable, alpha=alpha, lin=Ms)
-
-    T, _ = lax.scan(lambda T, _: (step(T), None), T, None,
-                    length=outer_iters)
-    quad = jnp.sum(T * cost_fn(T))
-    lin = jnp.sum(Ms * T)
-    return alpha * quad + (1.0 - alpha) * lin, (rows, cols, T)
+    from repro.api import Geometry, QuadraticProblem, SparGWSolver, solve
+    _warn_deprecated("spar_fgw")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, fused_penalty=alpha, M=M,
+                               validate=False)
+    solver = SparGWSolver(s=s, reg=reg, epsilon=epsilon,
+                          outer_iters=outer_iters, inner_iters=inner_iters,
+                          shrink=shrink, cost_chunk=cost_chunk,
+                          stable=stable, cost_impl=cost_impl)
+    out = solve(problem, solver, key=key, validate=False)
+    c = out.coupling
+    return out.value, (c.rows, c.cols, c.vals)

@@ -1,30 +1,20 @@
-"""SPAR-UGW — Algorithm 3: importance sparsification for unbalanced GW.
+"""SPAR-UGW — legacy entry points (deprecation shims) + UGW helpers.
 
 UGW relaxes the marginal constraints via quadratic KL divergences
-(Séjourné et al., 2021). The sampling probability (eq. 9) depends on the
-kernel at the rank-one initialization T⁰ = a bᵀ / sqrt(m(a) m(b)); the
-decomposable fast path computes it in O(mn), the general path in chunked
-O(m²n²) — once, as in the paper.
-
-All kernels are handled in log domain: the unbalanced Sinkhorn exponent
-makes plain-domain iterations scale-sensitive (no min-subtraction trick
-exists), so fp32 underflow would otherwise kill the coupling at small ε.
+(Séjourné et al., 2021). The solver implementation lives in
+``repro.api.solvers`` (the unbalanced branch of ``SparGWSolver`` /
+``DenseGWSolver``); these shims keep the original signatures and bare
+tuple returns. The objective helpers (`_marginal_penalty`, `ugw_value`,
+`naive_ugw_value`) stay here — they are shared by the API layer and the
+benchmarks.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import sampling
 from repro.core.gw import dense_cost
-from repro.core.sinkhorn import (
-    sinkhorn_unbalanced_log,
-    sparse_sinkhorn_unbalanced_log,
-)
-from repro.core.spar_gw import _cost_factory, spar_cost
+from repro.core.spar_gw import _warn_deprecated, spar_cost
 from repro.core.utils import quadratic_kl
 
 
@@ -49,80 +39,37 @@ def ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss: str, cost_chunk=1024,
     return quad + lam * quadratic_kl(mu, a) + lam * quadratic_kl(nu, b)
 
 
-@partial(jax.jit,
-         static_argnames=("s", "loss", "outer_iters", "inner_iters",
-                          "cost_chunk", "cost_impl"))
 def spar_ugw(key, a, b, Cx, Cy, s: int, loss: str = "l2", lam: float = 1.0,
              epsilon: float = 1e-2, outer_iters: int = 20,
              inner_iters: int = 50, shrink: float = 0.0,
              cost_chunk: int = 1024, cost_impl: str = "auto"):
-    """Algorithm 3. Returns (ugw_estimate, (rows, cols, coupling_values))."""
-    m, n = Cx.shape[0], Cy.shape[0]
-    ma, mb = jnp.sum(a), jnp.sum(b)
-    scale = jnp.sqrt(ma * mb)
-
-    # --- steps 2-3: dense rank-one init and its (log-)kernel — computed once
-    T0 = a[:, None] * b[None, :] / scale
-    m0 = jnp.sum(T0)
-    C0 = dense_cost(Cx, Cy, T0, loss) + _marginal_penalty(
-        T0.sum(1), T0.sum(0), a, b, lam)
-    logK0 = -C0 / (epsilon * m0) + jnp.log(jnp.maximum(T0, 1e-38))
-
-    # --- steps 4-5: sampling probability (eq. 9) and index set
-    P = sampling.unbalanced_probs(a, b, logK0, lam, epsilon, shrink)
-    rows, cols = sampling.sample_pairs_2d(key, P, s)
-    p = P[rows, cols]
-    logw = -jnp.log(s * jnp.maximum(p, 1e-38))
-    T = a[rows] * b[cols] / scale
-    cost_fn = _cost_factory()(Cx, Cy, rows, cols, loss, impl=cost_impl,
-                              chunk=cost_chunk)
-
-    def outer(T, _):
-        mT = jnp.sum(T)
-        eps_bar = epsilon * mT
-        lam_bar = lam * mT
-        mu = jax.ops.segment_sum(T, rows, num_segments=m)
-        nu = jax.ops.segment_sum(T, cols, num_segments=n)
-        # fused: logK = -(L@T̃ + penalty)/ε̄ + log T̃ + log w in one pass
-        off = (-_marginal_penalty(mu, nu, a, b, lam) / eps_bar
-               + jnp.log(jnp.maximum(T, 1e-38)) + logw)
-        logK = cost_fn((-1.0 / eps_bar) * T, off)
-        T_new = sparse_sinkhorn_unbalanced_log(
-            a, b, rows, cols, logK, lam_bar, eps_bar, m, n, inner_iters)
-        # step 10: mass rescaling
-        T_new = jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
-        return T_new, None
-
-    T, _ = lax.scan(outer, T, None, length=outer_iters)
-    value = ugw_value(a, b, Cx, Cy, rows, cols, T, lam, loss, cost_chunk,
-                      cost_fn=cost_fn)
-    return value, (rows, cols, T)
+    """Algorithm 3 (shim). Returns (ugw_estimate, (rows, cols, vals))."""
+    from repro.api import Geometry, QuadraticProblem, SparGWSolver, solve
+    _warn_deprecated("spar_ugw")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, lam=lam, validate=False)
+    solver = SparGWSolver(s=s, epsilon=epsilon, outer_iters=outer_iters,
+                          inner_iters=inner_iters, shrink=shrink,
+                          cost_chunk=cost_chunk, cost_impl=cost_impl)
+    out = solve(problem, solver, key=key, validate=False)
+    c = out.coupling
+    return out.value, (c.rows, c.cols, c.vals)
 
 
-@partial(jax.jit,
-         static_argnames=("loss", "outer_iters", "inner_iters"))
 def ugw_dense(a, b, Cx, Cy, loss: str = "l2", lam: float = 1.0,
               epsilon: float = 1e-2, outer_iters: int = 20,
               inner_iters: int = 50):
-    """Dense PGA-UGW baseline (the paper's benchmark for Fig. 3)."""
-    T0 = a[:, None] * b[None, :] / jnp.sqrt(jnp.sum(a) * jnp.sum(b))
-
-    def outer(T, _):
-        mT = jnp.sum(T)
-        eps_bar = epsilon * mT
-        lam_bar = lam * mT
-        C = dense_cost(Cx, Cy, T, loss) + _marginal_penalty(
-            T.sum(1), T.sum(0), a, b, lam)
-        logK = -C / eps_bar + jnp.log(jnp.maximum(T, 1e-38))
-        T_new = sinkhorn_unbalanced_log(a, b, logK, lam_bar, eps_bar,
-                                        inner_iters)
-        T_new = jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
-        return T_new, None
-
-    T, _ = lax.scan(outer, T0, None, length=outer_iters)
-    quad = jnp.sum(T * dense_cost(Cx, Cy, T, loss))
-    val = quad + lam * quadratic_kl(T.sum(1), a) + lam * quadratic_kl(T.sum(0), b)
-    return val, T
+    """Dense PGA-UGW baseline (shim; the paper's benchmark for Fig. 3)."""
+    from repro.api import DenseGWSolver, Geometry, QuadraticProblem, solve
+    _warn_deprecated("ugw_dense")
+    problem = QuadraticProblem(Geometry(Cx, a, validate=False),
+                               Geometry(Cy, b, validate=False),
+                               loss=loss, lam=lam, validate=False)
+    solver = DenseGWSolver(epsilon=epsilon, outer_iters=outer_iters,
+                           inner_iters=inner_iters)
+    out = solve(problem, solver, validate=False)
+    return out.value, out.coupling
 
 
 def naive_ugw_value(a, b, Cx, Cy, loss: str = "l2", lam: float = 1.0):
