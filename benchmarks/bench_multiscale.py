@@ -1,0 +1,98 @@
+"""Multiscale scaling benchmark: quantized_gw vs spar_gw vs dense_gw.
+
+Wall-time and GW value per solver over growing n on 3-D gaussian point
+clouds, with each solver dropped once it stops being feasible on CPU
+(dense beyond ~1k, spar beyond ~2k; quantized runs to 20k under
+REPRO_BENCH_FULL=1). Cost matrices are built chunked in float32 so the
+20k case stays within a couple of GB.
+
+  python benchmarks/bench_multiscale.py            # n up to 2000
+  python benchmarks/bench_multiscale.py --quick    # n=300 smoke
+  REPRO_BENCH_FULL=1 python benchmarks/bench_multiscale.py   # n to 20k
+
+Also appends its records to BENCH_PR3.json (--json '' disables).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, merge_bench_json, record
+
+DENSE_MAX = 1000
+SPAR_MAX = 2000
+
+
+def cloud_dists(seed: int, n: int, d: int = 3, chunk: int = 2048):
+    """(n, n) float32 euclidean distance matrix, chunked (no n² float64)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    sq = (x ** 2).sum(1)
+    D = np.empty((n, n), np.float32)
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        g = sq[lo:hi, None] + sq[None, :] - 2.0 * (x[lo:hi] @ x.T)
+        D[lo:hi] = np.sqrt(np.maximum(g, 0.0))
+    return D
+
+
+def solvers_for(n: int):
+    import repro
+    out = {"quantized_gw": repro.QuantizedGWSolver()}
+    if n <= SPAR_MAX:
+        out["spar_gw"] = repro.SparGWSolver(s=16 * n, inner_tol=1e-7,
+                                            tol=1e-5)
+    if n <= DENSE_MAX:
+        out["dense_gw"] = repro.DenseGWSolver(inner_iters=500,
+                                              inner_tol=1e-7, tol=1e-5)
+    return out
+
+
+def main(quick: bool = False, json_path: str = "BENCH_PR3.json"):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+
+    if quick:
+        sizes = (300,)
+    elif FULL:
+        sizes = (1000, 2000, 5000, 10_000, 20_000)
+    else:
+        sizes = (500, 1000, 2000)
+    key = jax.random.PRNGKey(0)
+    results = []
+    for n in sizes:
+        Cx = jnp.asarray(cloud_dists(0, n))
+        Cy = jnp.asarray(cloud_dists(1, n))
+        a = b = jnp.ones((n,), jnp.float32) / n
+        problem = repro.QuadraticProblem(repro.Geometry(Cx, a),
+                                         repro.Geometry(Cy, b))
+        for name, solver in solvers_for(n).items():
+            t0 = time.time()
+            out = repro.solve(problem, solver, key=key)
+            jax.block_until_ready(out.value)
+            sec = time.time() - t0
+            record(f"multiscale/n{n}/{name}", sec * 1e6,
+                   f"value={float(out.value):.5f};"
+                   f"converged={bool(out.converged)}")
+            results.append({
+                "solver": name, "dataset": "gauss3d", "loss": "l2", "n": n,
+                "wall_time_s": round(sec, 6), "value": float(out.value),
+                "converged": bool(out.converged),
+                "n_iters": int(out.n_iters),
+            })
+        del Cx, Cy, problem
+    if json_path:
+        merge_bench_json(json_path, "gauss3d", results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="n=300 smoke")
+    ap.add_argument("--json", default="BENCH_PR3.json",
+                    help="append records here ('' disables)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

@@ -1,7 +1,9 @@
 """Shared benchmark harness utilities. CSV contract: name,us_per_call,derived."""
 from __future__ import annotations
 
+import json
 import os
+import sys
 import time
 
 import jax
@@ -19,6 +21,28 @@ def record(name: str, us_per_call: float, derived: str = ""):
 
 def rows():
     return list(_rows)
+
+
+def merge_bench_json(path: str, dataset: str, results: list) -> None:
+    """Merge ``results`` into the perf-trajectory JSON at ``path``.
+
+    Each writer owns one ``dataset`` namespace: its previous records are
+    replaced, every other writer's records are preserved, so run.py and
+    bench_multiscale.py can share one diffable BENCH_PR3.json.
+    """
+    merged = {"schema": "bench-pr3-v1", "results": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    merged["results"] = [r for r in merged.get("results", [])
+                         if r.get("dataset") != dataset] + results
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"wrote {path} (+{len(results)} {dataset} records)",
+          file=sys.stderr)
 
 
 def timed(fn, *args, reps: int = 1, warmup: bool = True):

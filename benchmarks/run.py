@@ -8,8 +8,14 @@ Modes:
   python benchmarks/run.py                      # full paper suite
   python benchmarks/run.py --solver spar_gw     # one registered solver
   python benchmarks/run.py --solver all         # every registered solver
+  python benchmarks/run.py --solver quantized_gw --quick   # CI smoke
 (the --solver path benchmarks through repro.solve, so any solver added
 via @register_solver is benchmarkable with no further CLI work).
+
+Solver mode also writes the machine-readable perf trajectory to
+``BENCH_PR3.json`` (override with --json): one record per (solver, n)
+with wall time, GW value, and convergence info, so per-PR perf history
+is diffable instead of scraped from CSV logs.
 """
 from __future__ import annotations
 
@@ -18,9 +24,10 @@ import sys
 import traceback
 
 
-def run_solver_mode(names, n: int, loss: str, reps: int) -> None:
+def run_solver_mode(names, n: int, loss: str, reps: int,
+                    json_path: str) -> None:
     import repro
-    from benchmarks.common import bench_solver
+    from benchmarks.common import bench_solver, merge_bench_json
 
     if names == ["all"]:
         names = list(repro.available_solvers())
@@ -30,32 +37,40 @@ def run_solver_mode(names, n: int, loss: str, reps: int) -> None:
             f"unknown solver(s) {unknown}; available: "
             f"{', '.join(repro.available_solvers())}")
     print("name,us_per_call,derived")
+    results = []
     for name in names:
-        bench_solver(name, n=n, loss=loss, reps=reps)
+        sec, out = bench_solver(name, n=n, loss=loss, reps=reps)
+        results.append({
+            "solver": name,
+            "dataset": "moon",
+            "loss": loss,
+            "n": n,
+            "wall_time_s": round(sec, 6),
+            "value": float(out.value),
+            "converged": bool(out.converged),
+            "n_iters": int(out.n_iters),
+        })
+    if json_path:
+        merge_bench_json(json_path, "moon", results)
+
+
+_SUITE = ("bench_fig2", "bench_fig3_ugw", "bench_fig4_sensitivity",
+          "bench_fig5_scaling", "bench_fig6_fgw", "bench_grid_vs_coo",
+          "bench_spar_cost", "bench_tables23_graphs", "bench_multiscale",
+          "bench_lm_step")
 
 
 def run_full_suite() -> None:
-    from benchmarks import (
-        bench_fig2,
-        bench_fig3_ugw,
-        bench_fig4_sensitivity,
-        bench_fig5_scaling,
-        bench_fig6_fgw,
-        bench_grid_vs_coo,
-        bench_lm_step,
-        bench_spar_cost,
-        bench_tables23_graphs,
-    )
+    import importlib
+
     print("name,us_per_call,derived")
     failures = []
-    for mod in (bench_fig2, bench_fig3_ugw, bench_fig4_sensitivity,
-                bench_fig5_scaling, bench_fig6_fgw, bench_grid_vs_coo,
-                bench_spar_cost, bench_tables23_graphs, bench_lm_step):
+    for name in _SUITE:
         try:
-            mod.main()
+            importlib.import_module(f"benchmarks.{name}").main()
         except Exception:  # noqa: BLE001
             traceback.print_exc()
-            failures.append(mod.__name__)
+            failures.append(name)
     # roofline table (reads dry-run artifacts if present)
     try:
         from benchmarks import roofline
@@ -74,12 +89,24 @@ def main() -> None:
                     help="benchmark the named registered solver(s) through "
                          "repro.solve ('all' = every registered solver); "
                          "omit for the full paper suite")
-    ap.add_argument("--n", type=int, default=120, help="problem size")
+    ap.add_argument("--n", type=int, default=None,
+                    help="problem size (default 120, or 60 with --quick)")
     ap.add_argument("--loss", default="l2", help="ground loss")
-    ap.add_argument("--reps", type=int, default=3, help="timing reps")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing reps (default 3, or 1 with --quick)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke defaults: n=60, 1 rep (explicit --n/"
+                         "--reps still win)")
+    ap.add_argument("--json", default="BENCH_PR3.json", metavar="PATH",
+                    help="machine-readable output for solver mode "
+                         "('' disables)")
     args = ap.parse_args()
+    if args.n is None:
+        args.n = 60 if args.quick else 120
+    if args.reps is None:
+        args.reps = 1 if args.quick else 3
     if args.solver:
-        run_solver_mode(args.solver, args.n, args.loss, args.reps)
+        run_solver_mode(args.solver, args.n, args.loss, args.reps, args.json)
     else:
         run_full_suite()
 

@@ -2,7 +2,8 @@
 
 Public API: build a :class:`~repro.QuadraticProblem` from two
 :class:`~repro.Geometry` objects and call :func:`repro.solve` with a
-solver config. The per-variant functions in ``repro.core`` (``spar_gw``,
+solver config (or none — the solver is auto-selected from the problem
+structure). The per-variant functions in ``repro.core`` (``spar_gw``,
 ``gw_dense``, ...) remain available as deprecation shims over this layer.
 """
 from repro.api import (
@@ -12,11 +13,14 @@ from repro.api import (
     GridGWSolver,
     GWOutput,
     QuadraticProblem,
+    QuantizedCoupling,
+    QuantizedGWSolver,
     SparGWSolver,
     SparseCoupling,
     available_solvers,
     get_solver,
     register_solver,
+    select_solver,
     solve,
 )
 
@@ -26,10 +30,13 @@ __all__ = [
     "GWOutput",
     "SparseCoupling",
     "GridCoupling",
+    "QuantizedCoupling",
     "solve",
+    "select_solver",
     "SparGWSolver",
     "DenseGWSolver",
     "GridGWSolver",
+    "QuantizedGWSolver",
     "get_solver",
     "register_solver",
     "available_solvers",

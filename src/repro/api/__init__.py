@@ -2,14 +2,20 @@
 
 Pytree-native layer over the paper's solver family: build a
 ``QuadraticProblem`` from two ``Geometry``s, pick a solver config (or a
-registry name), and call ``repro.solve`` — every variant (GW, entropic,
-fused, unbalanced, sparse, grid) returns the same structured ``GWOutput``
-and composes with ``jax.jit`` / ``jax.vmap``.
+registry name, or let ``select_solver`` pick one from the problem
+structure), and call ``repro.solve`` — every variant (GW, entropic,
+fused, unbalanced, sparse, grid, multiscale) returns the same structured
+``GWOutput`` and composes with ``jax.jit`` / ``jax.vmap``.
 """
 from repro.api.geometry import Geometry
-from repro.api.output import GridCoupling, GWOutput, SparseCoupling
+from repro.api.output import (
+    GridCoupling,
+    GWOutput,
+    QuantizedCoupling,
+    SparseCoupling,
+)
 from repro.api.problem import QuadraticProblem
-from repro.api.solve import solve
+from repro.api.solve import select_solver, solve
 from repro.api.solvers import (
     DenseGWSolver,
     GridGWSolver,
@@ -19,16 +25,22 @@ from repro.api.solvers import (
     register_solver,
 )
 
+# importing the multiscale subsystem registers the "quantized_gw" solver
+from repro.multiscale.solver import QuantizedGWSolver  # noqa: E402
+
 __all__ = [
     "Geometry",
     "QuadraticProblem",
     "GWOutput",
     "SparseCoupling",
     "GridCoupling",
+    "QuantizedCoupling",
     "solve",
+    "select_solver",
     "SparGWSolver",
     "DenseGWSolver",
     "GridGWSolver",
+    "QuantizedGWSolver",
     "get_solver",
     "register_solver",
     "available_solvers",

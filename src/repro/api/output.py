@@ -42,12 +42,48 @@ class GridCoupling(NamedTuple):
         return Z.at[self.rows[:, None], self.cols[None, :]].add(self.block)
 
 
+class QuantizedCoupling(NamedTuple):
+    """Hierarchical coupling from the multiscale pipeline (DESIGN.md §6).
+
+    One refined member×member block per supported anchor pair of the
+    coarse coupling. Padded member slots carry point index 0 with block
+    value exactly 0.0, so flattening/scattering needs no separate mask and
+    ``tocoo()`` is COO-compatible with the SparseCoupling consumers
+    (duplicate (0, 0) padding entries merge to +0 by summation).
+    """
+    pair_rows: Any   # (B,) int — anchor id on the X side of each block
+    pair_cols: Any   # (B,) int — anchor id on the Y side of each block
+    members_x: Any   # (B, cap_x) int — fine point indices (0 where padded)
+    members_y: Any   # (B, cap_y) int
+    blocks: Any      # (B, cap_x, cap_y) float — 0.0 on padded slots
+
+    def tocoo(self):
+        """Flatten to COO (rows, cols, vals) of length B·cap_x·cap_y."""
+        Bn, cx, cy = self.blocks.shape
+        rows = jnp.broadcast_to(self.members_x[:, :, None], (Bn, cx, cy))
+        cols = jnp.broadcast_to(self.members_y[:, None, :], (Bn, cx, cy))
+        return rows.reshape(-1), cols.reshape(-1), self.blocks.reshape(-1)
+
+    def todense(self, m: int, n: int):
+        rows, cols, vals = self.tocoo()
+        return jnp.zeros((m, n), self.blocks.dtype).at[rows, cols].add(vals)
+
+    def marginals(self, m: int, n: int):
+        """(mu, nu) of the refined coupling — O(B·cap²), never densifies."""
+        mu = jnp.zeros((m,), self.blocks.dtype).at[
+            self.members_x.reshape(-1)].add(self.blocks.sum(axis=2).reshape(-1))
+        nu = jnp.zeros((n,), self.blocks.dtype).at[
+            self.members_y.reshape(-1)].add(self.blocks.sum(axis=1).reshape(-1))
+        return mu, nu
+
+
 @dataclass(frozen=True)
 class GWOutput:
     """Result of one GW solve.
 
     value     — scalar objective estimate (GW/FGW/UGW value)
-    coupling  — (m, n) dense array, ``SparseCoupling``, or ``GridCoupling``
+    coupling  — (m, n) dense array, ``SparseCoupling``, ``GridCoupling``,
+                or ``QuantizedCoupling``
     errors    — (outer_iters,) marginal-violation ℓ1 error recorded after
                 each outer iteration; NaN beyond ``n_iters``
     converged — True iff the outer loop hit the tolerance before the bound

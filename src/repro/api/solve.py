@@ -11,6 +11,9 @@ and ``jax.vmap`` transforms — batching a stack of problems over keys is
     out = batched(stacked_problems, jax.random.split(key, B))
 
 where ``stacked_problems = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)``.
+
+With ``solver=None`` (the default) a solver is auto-selected from the
+problem's structure — see :func:`select_solver`.
 """
 from __future__ import annotations
 
@@ -21,27 +24,64 @@ import jax
 from repro.api.problem import QuadraticProblem
 from repro.api.solvers import get_solver
 
+# auto-selection size thresholds (max(m, n)); see select_solver
+AUTO_DENSE_MAX = 256
+AUTO_SPAR_MAX = 2048
+
+
+def select_solver(problem: QuadraticProblem):
+    """Pick a solver config from the problem's structure (size/variant).
+
+    Heuristic (ROADMAP "solver auto-selection"):
+
+    * max(m, n) ≤ 256 — ``dense_gw``: full-resolution PGA is cheap, exact
+      resolution, and needs no PRNG key;
+    * ≤ 2048 — ``spar_gw`` with the paper's s = 16n support: the O(s²)
+      cost assembly still beats dense O(n³)-per-iteration work;
+    * larger — ``quantized_gw`` (multiscale): the only variant whose
+      per-iteration cost does not grow with a power of n. (For
+      unbalanced problems at this scale the reported value is the
+      anchor-level estimate and the refined marginals are relaxed —
+      but spar_gw's O((16n)²)-per-iteration assembly is infeasible
+      there, so quantized is still the right default.)
+
+    Fused/unbalanced structure needs no routing beyond that — every
+    selected solver dispatches on problem structure internally.
+    """
+    size = max(problem.shape)
+    if size <= AUTO_DENSE_MAX:
+        return get_solver("dense_gw").default_config(size)
+    if size <= AUTO_SPAR_MAX:
+        return get_solver("spar_gw").default_config(size)
+    return get_solver("quantized_gw").default_config(size)
+
 
 @jax.jit
 def _solve_jit(problem, solver, key):
     return solver.run(problem, key)
 
 
-def solve(problem: QuadraticProblem, solver: Union[str, object] = "spar_gw",
+def solve(problem: QuadraticProblem,
+          solver: Union[str, object, None] = None,
           key: Optional[jax.Array] = None, validate: bool = True):
     """Solve a QuadraticProblem; returns a structured ``GWOutput``.
 
-    solver   — a solver config instance, or a registry name ("spar_gw",
-               "dense_gw", "grid_gw", ...) which selects that solver's
-               ``default_config`` for the problem size
-    key      — PRNG key; required by sampling solvers, ignored by dense
+    solver   — a solver config instance; a registry name ("spar_gw",
+               "dense_gw", "grid_gw", "quantized_gw", ...) which selects
+               that solver's ``default_config`` for the problem size; or
+               None to auto-select from the problem structure
+               (:func:`select_solver`)
+    key      — PRNG key; required by sampling/multiscale solvers, ignored
+               by dense
     validate — run the problem's boundary checks if they haven't run yet
                (construction with validate=True already marks the problem
                validated; value checks are auto-skipped under tracing;
                pass False for zero overhead)
     """
-    if isinstance(solver, str):
-        solver = get_solver(solver).default_config(problem.geom_x.n)
+    if solver is None:
+        solver = select_solver(problem)
+    elif isinstance(solver, str):
+        solver = get_solver(solver).default_config(max(problem.shape))
     if validate and not getattr(problem, "_validated", False):
         problem.check()
     return _solve_jit(problem, solver, key)

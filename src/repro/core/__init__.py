@@ -1,7 +1,14 @@
 """The paper's contribution: importance-sparsified GW distances in JAX."""
 from repro.core.align import gw_alignment_loss
 from repro.core.grid_gw import grid_cost, grid_spar_gw
-from repro.core.gw import dense_cost, egw, gw_dense, gw_objective, pga_gw
+from repro.core.gw import (
+    dense_cost,
+    egw,
+    fgw_dense,
+    gw_dense,
+    gw_objective,
+    pga_gw,
+)
 from repro.core.sagrow import sagrow
 from repro.core.sinkhorn import (
     sinkhorn,

@@ -1,0 +1,39 @@
+"""Multiscale (quantized) GW subsystem — anchor-compress → solve → refine.
+
+DESIGN.md §6. The pipeline stages are reusable on their own:
+``anchors.select_anchors`` (FPS + weighted medoid refinement),
+``compress.compress_problem`` (anchor-level QuadraticProblem), and
+``refine.block_refine`` (block-local Sinkhorn expansion). The registered
+``quantized_gw`` solver (:class:`QuantizedGWSolver`) composes them with
+any registered base solver for the anchor-level solve.
+"""
+from repro.multiscale.anchors import (
+    AnchorAssignment,
+    farthest_point_sampling,
+    medoid_refinement,
+    member_table,
+    membership,
+    select_anchors,
+)
+from repro.multiscale.compress import (
+    compress_geometry,
+    compress_linear_cost,
+    compress_problem,
+)
+from repro.multiscale.refine import block_refine, top_pairs
+from repro.multiscale.solver import QuantizedGWSolver
+
+__all__ = [
+    "AnchorAssignment",
+    "select_anchors",
+    "farthest_point_sampling",
+    "medoid_refinement",
+    "member_table",
+    "membership",
+    "compress_geometry",
+    "compress_linear_cost",
+    "compress_problem",
+    "block_refine",
+    "top_pairs",
+    "QuantizedGWSolver",
+]

@@ -1,0 +1,135 @@
+"""Anchor selection for the multiscale (quantized) GW pipeline — stage 1.
+
+Compress each metric-measure space to k ≪ n *anchors* (Chowdhury et al.,
+2021): a deterministic, key-driven pipeline working purely on the pairwise
+cost matrix (no coordinates required, so it covers graphs as well as point
+clouds):
+
+  1. **farthest-point sampling** — the first anchor is drawn from the
+     marginal (the only use of the PRNG key; everything downstream is
+     deterministic given it), each subsequent anchor maximizes the minimum
+     cost to the anchors chosen so far;
+  2. **weighted medoid refinement** — Lloyd iterations adapted to
+     metric-measure data: assign every point to its nearest anchor, then
+     move each anchor to the member minimizing the marginal-weighted sum
+     of costs to its cluster (k-medoids, since only the cost matrix is
+     available — no barycenters to average).
+
+Everything is ``lax``-native (``fori_loop`` + argmin/argmax), so anchor
+selection traces once and runs inside ``jit``/``vmap`` like the rest of
+``repro.solve``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class AnchorAssignment(NamedTuple):
+    """Anchors for one geometry: k representatives + a hard partition.
+
+    indices — (k,) int32 anchor *point* indices into the parent geometry
+    assign  — (n,) int32 cluster id in [0, k) for every point
+    weights — (k,) aggregated marginal mass per anchor (Σ of member weights;
+              sums to the total mass of the parent marginal)
+    """
+    indices: Any
+    assign: Any
+    weights: Any
+
+
+def farthest_point_sampling(key, D, weights, k: int):
+    """k anchor indices: random weighted start, then greedy max-min cost."""
+    start = jax.random.categorical(key, jnp.log(jnp.maximum(weights, 1e-38)))
+    idx0 = jnp.zeros((k,), jnp.int32).at[0].set(start.astype(jnp.int32))
+    mind0 = D[start].at[start].set(-jnp.inf)   # chosen points never re-picked
+
+    def body(i, state):
+        idx, mind = state
+        nxt = jnp.argmax(mind).astype(jnp.int32)
+        return idx.at[i].set(nxt), jnp.minimum(mind, D[nxt]).at[nxt].set(-jnp.inf)
+
+    idx, _ = lax.fori_loop(1, k, body, (idx0, mind0))
+    return idx
+
+
+def medoid_refinement(D, weights, indices, iters: int):
+    """Weighted Lloyd/k-medoids rounds on the cost matrix.
+
+    Each round: assign points to the nearest current anchor, then for each
+    cluster pick the member j minimizing Σ_{i∈cluster} w_i D[j, i]. Empty
+    clusters (possible after duplicate draws on e.g. 0/1 adjacency costs)
+    keep their anchor. Returns (indices, assign).
+    """
+    k = indices.shape[0]
+
+    def body(_, idx):
+        assign = jnp.argmin(D[:, idx], axis=1)
+        member = jax.nn.one_hot(assign, k, dtype=D.dtype)          # (n, k)
+        scores = D @ (weights[:, None] * member)                   # (n, k)
+        scores = jnp.where(member > 0, scores, jnp.inf)
+        new = jnp.argmin(scores, axis=0).astype(idx.dtype)
+        empty = jnp.sum(member, axis=0) == 0
+        return jnp.where(empty, idx, new)
+
+    indices = lax.fori_loop(0, iters, body, indices)
+    assign = jnp.argmin(D[:, indices], axis=1).astype(jnp.int32)
+    return indices, assign
+
+
+def select_anchors(key, D, weights, k: int, method: str = "fps",
+                   refine_iters: int = 2) -> AnchorAssignment:
+    """Pick k anchors of the space (D, weights) and partition the points.
+
+    method — "fps" (farthest-point start, the default) or "random"
+             (k weighted draws without replacement; baseline)
+    """
+    if method == "fps":
+        idx = farthest_point_sampling(key, D, weights, k)
+    elif method == "random":
+        idx = jax.random.choice(key, D.shape[0], (k,), replace=False,
+                                p=weights).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown anchor method {method!r} "
+                         f"(known: fps, random)")
+    idx, assign = medoid_refinement(D, weights, idx, refine_iters)
+    wk = jax.ops.segment_sum(weights, assign, num_segments=k)
+    return AnchorAssignment(idx, assign, wk)
+
+
+def membership(anchors: AnchorAssignment, weights):
+    """Conditional membership matrix P (n, k): P[i, c] = w_i/w̃_c · 1[i ∈ c].
+
+    Columns are the member distributions of each cluster (each sums to 1);
+    used for mean-metric compression and the cluster-averaged linearized
+    refinement cost.
+    """
+    k = anchors.indices.shape[0]
+    cond = weights / jnp.maximum(anchors.weights[anchors.assign], 1e-38)
+    return jax.nn.one_hot(anchors.assign, k, dtype=weights.dtype) * cond[:, None]
+
+
+def member_table(assign, k: int, cap: int):
+    """Padded member lists: table[c, slot] = point index, -1 where padded.
+
+    Every point gets the slot equal to its rank (by point index) within
+    its cluster; points ranked ≥ cap are *dropped* from the table (their
+    mass is excluded from refinement and shows up as marginal violation —
+    size cap generously, see QuantizedGWSolver.max_members). Returns
+    (table (k, cap) int32, dropped_mask (n,) bool).
+    """
+    n = assign.shape[0]
+    order = jnp.argsort(assign)                       # stable: groups clusters
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), assign,
+                                 num_segments=k)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32) - starts[assign[order]])
+    slot = jnp.minimum(rank, cap)                     # cap → out of bounds
+    table = jnp.full((k, cap), -1, jnp.int32).at[assign, slot].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return table, rank >= cap

@@ -1,0 +1,123 @@
+"""Block-local expansion of a coarse coupling — multiscale stage 3.
+
+The coarse solve produces an anchor-level coupling T̃ (k_x × k_y). For
+each of the ``max_pairs`` heaviest anchor pairs (c, d), refinement runs an
+entropic Sinkhorn between the *member distributions* of clusters c and d.
+The local ground cost is the **linearized GW cost** around the
+block-constant expansion T⁰ of the coarse coupling (T⁰ = Σ_{c,d} T̃[c,d]
+u_c v_dᵀ with u_c, v_d the member distributions):
+
+    E[i, j] = Σ_{i', j'} L(Cx[i, i'], Cy[j, j']) · T⁰[i', j']
+
+i.e. the exact first-order cost of matching i → j given the anchor-level
+correspondence. For decomposable losses L = f1 + f2 - h1·h2 this
+factorizes into f1(Cx)·a and f2(Cy)·b (exact fine marginal terms) plus a
+rank-k cross term (h1(Cx)·P_u) T̃ (h2(Cy)·P_v)ᵀ through the membership
+matrices — O(m²·k) matmuls, gathered per block. Indecomposable losses
+fall back to the distance-to-anchor profile cost L(d(x_i, x_c),
+d(y_j, y_d)) (the per-pair local alignment signal), which needs no
+full-resolution sum. For fused problems the (1-α)-weighted linear term
+restricted to the block is added in both cases.
+
+Each local coupling has marginals (a|_c / ã_c, b|_d / b̃_d), so scaling by
+T̃[c, d] and summing blocks yields a fine coupling whose marginals match
+(a, b) up to the coarse solve's own marginal violation, coarse mass
+outside the kept pairs, and members beyond the table cap.
+
+All blocks share the static shape (cap_x, cap_y) (padded slots get weight
+~0, zeroed exactly on emission), so the B local solves are one
+``vmap``-ed ``sinkhorn_log`` and the whole stage jits/vmaps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.api.output import QuantizedCoupling
+from repro.core import ground_cost as gc
+from repro.core.sinkhorn import sinkhorn_log
+from repro.multiscale.anchors import (
+    AnchorAssignment,
+    member_table,
+    membership,
+)
+
+_TINY = 1e-38
+# padded member slots get this weight instead of exact 0: XLA CPU flushes
+# subnormals, so the 1e-38 floor inside sinkhorn_log would become log(0) =
+# -inf and _finite would clamp the padded potentials to 0 — handing padded
+# slots full kernel mass. 1e-30 is a normal float32, keeping the padded
+# log-weights finite (≈ -69) and the padded coupling mass ≈ 1e-30.
+_PAD_WEIGHT = 1e-30
+
+
+def top_pairs(Tc, max_pairs: int):
+    """The ``max_pairs`` heaviest entries of the coarse coupling."""
+    ky = Tc.shape[1]
+    mass, flat = lax.top_k(Tc.reshape(-1), max_pairs)
+    return flat // ky, flat % ky, mass
+
+
+def _member_side(cost, weights, anchors: AnchorAssignment, cap: int):
+    """Padded member data for one side: indices, weights, anchor-distance
+    columns (all (k, cap)-shaped, padded slots down-weighted to ~0)."""
+    k = anchors.indices.shape[0]
+    table, _ = member_table(anchors.assign, k, cap)
+    mask = table >= 0
+    safe = jnp.where(mask, table, 0)
+    w = jnp.where(mask, weights[safe], 0.0)
+    w = jnp.maximum(w / jnp.maximum(w.sum(axis=1, keepdims=True), _TINY),
+                    _PAD_WEIGHT)
+    prof = jnp.where(mask, cost[safe, anchors.indices[:, None]], 0.0)
+    return safe, mask, w, prof
+
+
+def _linearized_factors(problem, ax, ay, Tc):
+    """The rank-k factorization of the linearized GW cost E around the
+    block-constant expansion T⁰ (decomposable losses):
+    E[i, j] = t1[i] + t2[j] - (Gx @ T̃ @ Gyᵀ)[i, j]."""
+    dec = gc.get_decomposition(problem.loss)
+    Cx, a = problem.geom_x.cost, problem.geom_x.weights
+    Cy, b = problem.geom_y.cost, problem.geom_y.weights
+    t1 = dec.f1(Cx) @ a                              # (m,)  μ(T⁰) = a exactly
+    t2 = dec.f2(Cy) @ b                              # (n,)
+    Gx = dec.h1(Cx) @ membership(ax, a)              # (m, k_x)
+    Gy = dec.h2(Cy) @ membership(ay, b)              # (n, k_y)
+    Mid = Tc @ Gy.T                                  # (k_x, n)
+    return t1, t2, Gx, Mid
+
+
+def block_refine(problem, ax: AnchorAssignment, ay: AnchorAssignment, Tc,
+                 *, cap_x: int, cap_y: int, max_pairs: int, epsilon,
+                 iters: int, tol: float) -> QuantizedCoupling:
+    """Expand the coarse coupling Tc into a ``QuantizedCoupling``."""
+    Cx, a = problem.geom_x.cost, problem.geom_x.weights
+    Cy, b = problem.geom_y.cost, problem.geom_y.weights
+    fused = problem.is_fused
+    alpha = problem.fused_penalty if fused else 1.0
+    decomposable = gc.get_decomposition(problem.loss) is not None
+
+    tx, mask_x, u, dx = _member_side(Cx, a, ax, cap_x)
+    ty, mask_y, v, dy = _member_side(Cy, b, ay, cap_y)
+    pr, pc, mass = top_pairs(Tc, max_pairs)
+    if decomposable:
+        t1, t2, Gx, Mid = _linearized_factors(problem, ax, ay, Tc)
+    else:
+        L = gc.get_loss(problem.loss)
+
+    def one_block(c, d):
+        mx, my = tx[c], ty[d]
+        if decomposable:
+            E = t1[mx][:, None] + t2[my][None, :] - Gx[mx] @ Mid[:, my]
+        else:
+            E = L(dx[c][:, None], dy[d][None, :])
+        if fused:
+            E = alpha * E + (1.0 - alpha) * problem.linear_cost_at(
+                mx[:, None], my[None, :])
+        return sinkhorn_log(u[c], v[d], -E / epsilon, iters, tol=tol)
+
+    blocks = jax.vmap(one_block)(pr, pc) * mass[:, None, None]
+    # zero the (≈1e-30-mass) padded slots exactly; padded member index -> 0
+    blocks = blocks * mask_x[pr][:, :, None] * mask_y[pc][:, None, :]
+    return QuantizedCoupling(pr, pc, tx[pr], ty[pc], blocks)

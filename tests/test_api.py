@@ -342,6 +342,39 @@ def test_solve_by_name():
     assert np.isfinite(float(out.value))
 
 
+def test_select_solver_heuristic():
+    """solver=None auto-selects from problem structure (ROADMAP item)."""
+    from repro import DenseGWSolver as D
+    from repro import QuantizedGWSolver as Q
+    from repro import SparGWSolver as S
+    from repro import select_solver
+
+    def shaped(n, **kw):
+        a = jnp.ones(n) / n
+        g = Geometry(jnp.zeros((n, n)), a, validate=False)
+        return QuadraticProblem(g, g, validate=False, **kw)
+
+    assert isinstance(select_solver(shaped(100)), D)
+    mid = select_solver(shaped(1000))
+    assert isinstance(mid, S) and mid.s == 16 * 1000
+    assert isinstance(select_solver(shaped(4000)), Q)
+    # unbalanced problems route by size like balanced ones (spar's
+    # O((16n)²) assembly is infeasible at scale; quantized handles lam)
+    assert isinstance(select_solver(shaped(4000, lam=1.0)), Q)
+    assert isinstance(select_solver(shaped(1000, lam=1.0)), S)
+    # fused structure routes like balanced
+    assert isinstance(
+        select_solver(shaped(100, M=jnp.zeros((100, 100)),
+                             fused_penalty=0.5)), D)
+
+
+def test_solve_with_no_solver_auto_selects():
+    out = solve(_problem())          # N=20 -> dense_gw, no key needed
+    ref = solve(_problem(), DenseGWSolver.default_config(N))
+    np.testing.assert_array_equal(np.asarray(out.value),
+                                  np.asarray(ref.value))
+
+
 def test_solver_requires_key_and_support():
     prob = _problem()
     with pytest.raises(ValueError, match="PRNGKey"):

@@ -1,0 +1,361 @@
+"""Multiscale quantized-GW subsystem: anchors, compression, refinement,
+the registered quantized_gw solver (accuracy vs dense, jit+vmap
+composition, base-solver nesting), and the n=10k CPU regime."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import Geometry, QuadraticProblem, QuantizedGWSolver, solve
+from repro.api.output import QuantizedCoupling
+from repro.multiscale import (
+    AnchorAssignment,
+    compress_linear_cost,
+    compress_problem,
+    member_table,
+    membership,
+    select_anchors,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cloud(key, n, d=2, scale=1.0):
+    x = jax.random.normal(key, (n, d)) * scale
+    return jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+
+
+def _problem(seed=0, n=60, loss="l2", scale_y=1.2, **kw):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    Cx = _cloud(kx, n)
+    Cy = _cloud(ky, n, scale=scale_y)
+    a = b = jnp.ones(n) / n
+    return QuadraticProblem(Geometry(Cx, a), Geometry(Cy, b), loss=loss, **kw)
+
+
+# ---------------------------------------------------------------------------
+# anchors
+# ---------------------------------------------------------------------------
+
+def test_select_anchors_partition_and_weights():
+    n, k = 50, 12
+    D = _cloud(KEY, n)
+    a = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(n))
+    anch = select_anchors(KEY, D, a, k)
+    assert isinstance(anch, AnchorAssignment)
+    assert anch.indices.shape == (k,)
+    assert anch.assign.shape == (n,)
+    assert int(anch.assign.min()) >= 0 and int(anch.assign.max()) < k
+    # aggregated anchor weights conserve the marginal mass exactly
+    np.testing.assert_allclose(float(anch.weights.sum()), float(a.sum()),
+                               rtol=1e-6)
+    # every anchor is a member of its own cluster
+    np.testing.assert_array_equal(np.asarray(anch.assign[anch.indices]),
+                                  np.arange(k))
+
+
+def test_select_anchors_deterministic_given_key():
+    D = _cloud(KEY, 40)
+    a = jnp.ones(40) / 40
+    a1 = select_anchors(jax.random.PRNGKey(3), D, a, 8)
+    a2 = select_anchors(jax.random.PRNGKey(3), D, a, 8)
+    np.testing.assert_array_equal(np.asarray(a1.indices),
+                                  np.asarray(a2.indices))
+    a3 = select_anchors(jax.random.PRNGKey(4), D, a, 8)
+    assert a3.indices.shape == (8,)          # different key still valid
+
+
+def test_fps_anchors_are_distinct():
+    D = _cloud(KEY, 40)
+    anch = select_anchors(KEY, D, jnp.ones(40) / 40, 16, refine_iters=0)
+    assert len(set(np.asarray(anch.indices).tolist())) == 16
+
+
+def test_select_anchors_rejects_unknown_method():
+    D = _cloud(KEY, 20)
+    with pytest.raises(ValueError, match="anchor method"):
+        select_anchors(KEY, D, jnp.ones(20) / 20, 4, method="bogus")
+
+
+def test_member_table_partitions_points():
+    n, k = 37, 7
+    D = _cloud(KEY, n)
+    anch = select_anchors(KEY, D, jnp.ones(n) / n, k)
+    table, dropped = member_table(anch.assign, k, cap=n)
+    # with cap = n nothing is dropped and every point appears exactly once
+    assert not bool(dropped.any())
+    entries = np.asarray(table[table >= 0])
+    assert sorted(entries.tolist()) == list(range(n))
+    # a tight cap drops the overflow members, and only those
+    cap = 2
+    table2, dropped2 = member_table(anch.assign, k, cap=cap)
+    counts = np.bincount(np.asarray(anch.assign), minlength=k)
+    assert int(dropped2.sum()) == int(np.maximum(counts - cap, 0).sum())
+
+
+def test_membership_columns_are_distributions():
+    n, k = 30, 6
+    D = _cloud(KEY, n)
+    a = jax.random.dirichlet(jax.random.PRNGKey(2), jnp.ones(n))
+    anch = select_anchors(KEY, D, a, k)
+    P = membership(anch, a)
+    occupied = np.asarray(anch.weights) > 0
+    np.testing.assert_allclose(np.asarray(P.sum(0))[occupied], 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_compress_problem_structure():
+    prob = _problem(n=40)
+    ax = select_anchors(jax.random.PRNGKey(1), prob.geom_x.cost,
+                        prob.geom_x.weights, 10)
+    ay = select_anchors(jax.random.PRNGKey(2), prob.geom_y.cost,
+                        prob.geom_y.weights, 12)
+    cp = compress_problem(prob, ax, ay)
+    assert cp.shape == (10, 12)
+    assert cp.loss == prob.loss
+    np.testing.assert_allclose(float(cp.geom_x.weights.sum()), 1.0, rtol=1e-6)
+    # identity compression (k = n) with anchor metric reproduces the
+    # problem up to a permutation of points
+    ax_full = select_anchors(jax.random.PRNGKey(1), prob.geom_x.cost,
+                             prob.geom_x.weights, 40)
+    cp_full = compress_problem(prob, ax_full, ay, metric="anchor")
+    perm = np.asarray(ax_full.indices)
+    np.testing.assert_allclose(np.asarray(cp_full.geom_x.cost),
+                               np.asarray(prob.geom_x.cost)[perm][:, perm],
+                               atol=1e-6)
+
+
+def test_compress_linear_cost_conditional_average():
+    n = 30
+    prob = _problem(n=n)
+    ax = select_anchors(jax.random.PRNGKey(1), prob.geom_x.cost,
+                        prob.geom_x.weights, 6)
+    ay = select_anchors(jax.random.PRNGKey(2), prob.geom_y.cost,
+                        prob.geom_y.weights, 6)
+    # a constant linear cost must stay that constant under aggregation
+    M = jnp.full((n, n), 0.7)
+    Mk = compress_linear_cost(M, ax, ay, prob.geom_x.weights,
+                              prob.geom_y.weights)
+    occ = (np.asarray(ax.weights)[:, None] > 0) & (np.asarray(ay.weights)[None, :] > 0)
+    np.testing.assert_allclose(np.asarray(Mk)[occ], 0.7, rtol=1e-5)
+
+
+def test_compress_floors_empty_cluster_weights():
+    """An empty cluster aggregates to weight 0; XLA CPU subnormal flush
+    would turn that into log(0) = -inf inside the coarse Sinkhorn and
+    (via _finite clamping) hand the empty anchor full kernel mass. The
+    compress boundary must floor weights at a normal float32."""
+    from repro.core.sinkhorn import sinkhorn_log
+    from repro.multiscale import AnchorAssignment
+    from repro.multiscale.compress import compress_geometry
+
+    anch = AnchorAssignment(indices=jnp.array([0, 1, 2], jnp.int32),
+                            assign=jnp.array([0, 0, 1, 1], jnp.int32),
+                            weights=jnp.array([0.5, 0.5, 0.0]))
+    geom = Geometry(_cloud(KEY, 4), jnp.ones(4) / 4)
+    ck = compress_geometry(geom, anch)
+    assert float(ck.weights.min()) >= 1e-30
+    T = sinkhorn_log(ck.weights, ck.weights, -ck.cost / 1e-2, 200, tol=1e-9)
+    assert float(T[2].sum()) < 1e-6        # empty anchor stays massless
+
+
+def test_quantized_on_adjacency_costs():
+    """0/1 graph adjacency costs trigger duplicate medoids / empty
+    clusters; the pipeline must stay finite end-to-end."""
+    n = 60
+    key_g = jax.random.PRNGKey(11)
+    A = (jax.random.uniform(key_g, (n, n)) < 0.1).astype(jnp.float32)
+    A = jnp.triu(A, 1)
+    A = A + A.T
+    deg = A.sum(1) + 1e-6
+    a = deg / deg.sum()
+    prob = QuadraticProblem(Geometry(A, a), Geometry(A, a))
+    out = solve(prob, QuantizedGWSolver(k_x=12, k_y=12),
+                key=jax.random.PRNGKey(0))
+    assert np.isfinite(float(out.value))
+
+
+def test_mean_metric_compression_is_conditional_average():
+    n, k = 24, 24
+    prob = _problem(n=n)
+    ax = select_anchors(jax.random.PRNGKey(1), prob.geom_x.cost,
+                        prob.geom_x.weights, k)
+    # k = n: the mean metric equals the permuted cost matrix exactly
+    cp_mean = compress_problem(prob, ax, ax)
+    perm = np.asarray(ax.indices)
+    np.testing.assert_allclose(np.asarray(cp_mean.geom_x.cost),
+                               np.asarray(prob.geom_x.cost)[perm][:, perm],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the quantized_gw solver
+# ---------------------------------------------------------------------------
+
+def test_quantized_registered():
+    assert "quantized_gw" in repro.available_solvers()
+    assert repro.get_solver("quantized_gw") is QuantizedGWSolver
+
+
+def test_quantized_requires_key():
+    with pytest.raises(ValueError, match="PRNGKey"):
+        solve(_problem(), QuantizedGWSolver(k_x=8, k_y=8))
+
+
+def test_quantized_matches_dense_within_5pct():
+    """Acceptance: ≤5% relative error vs dense_gw on n≤200 point clouds."""
+    n, k = 150, 75
+    dense = repro.DenseGWSolver(epsilon=1e-2, outer_iters=60,
+                                inner_iters=2000, tol=1e-6, inner_tol=1e-8)
+    for seed in (0, 1):
+        prob = _problem(seed=seed, n=n)
+        ref = solve(prob, dense)
+        out = solve(prob, QuantizedGWSolver(k_x=k, k_y=k),
+                    key=jax.random.PRNGKey(7))
+        rel = abs(float(out.value) - float(ref.value)) / abs(float(ref.value))
+        assert rel <= 0.05, (
+            f"seed {seed}: quantized {float(out.value):.5f} vs dense "
+            f"{float(ref.value):.5f} (rel {rel:.4f})")
+
+
+def test_quantized_coupling_marginals_near_exact():
+    n = 100
+    prob = _problem(n=n)
+    out = solve(prob, QuantizedGWSolver(k_x=50, k_y=50),
+                key=jax.random.PRNGKey(7))
+    assert isinstance(out.coupling, QuantizedCoupling)
+    mu, nu = out.coupling.marginals(n, n)
+    err = float(jnp.abs(mu - prob.geom_x.weights).sum()
+                + jnp.abs(nu - prob.geom_y.weights).sum())
+    assert err < 0.05      # typically ~2e-2 here; exact marginals need
+    # a longer polish (the refinement stage itself is marginal-exact up
+    # to the coarse solve's own violation and the local Sinkhorn budget)
+    dense = out.coupling.todense(n, n)
+    np.testing.assert_allclose(float(dense.sum()), 1.0, atol=0.01)
+    rows, cols, vals = out.coupling.tocoo()
+    assert rows.shape == cols.shape == vals.shape
+    np.testing.assert_allclose(float(vals.sum()), float(dense.sum()),
+                               rtol=1e-6)
+
+
+def test_quantized_nests_any_base_solver():
+    """base accepts other registered solver configs (and name strings)."""
+    prob = _problem(n=60)
+    key = jax.random.PRNGKey(5)
+    spar = solve(prob, QuantizedGWSolver(
+        k_x=24, k_y=24, base=repro.SparGWSolver(tol=1e-6, inner_tol=1e-8)),
+        key=key)
+    assert np.isfinite(float(spar.value))
+    named = QuantizedGWSolver(k_x=24, k_y=24, base="dense_gw")
+    assert isinstance(named.base, repro.DenseGWSolver)
+    assert np.isfinite(float(solve(prob, named, key=key).value))
+
+
+def test_quantized_fused_and_unbalanced_and_l1():
+    prob_f = _problem(n=60, M=jax.random.uniform(jax.random.PRNGKey(9),
+                                                 (60, 60)),
+                      fused_penalty=0.6)
+    key = jax.random.PRNGKey(5)
+    solver = QuantizedGWSolver(k_x=20, k_y=20)
+    assert np.isfinite(float(solve(prob_f, solver, key=key).value))
+    # unbalanced: coarse-value path, refinement still emits a coupling
+    out_u = solve(_problem(n=60, lam=1.0), solver, key=key)
+    assert np.isfinite(float(out_u.value))
+    assert isinstance(out_u.coupling, QuantizedCoupling)
+    # indecomposable loss exercises the profile-cost fallback
+    assert np.isfinite(float(solve(_problem(n=60, loss="l1"), solver,
+                                   key=key).value))
+
+
+def test_quantized_value_mode_validation():
+    with pytest.raises(ValueError, match="value_mode"):
+        QuantizedGWSolver(value_mode="bogus")
+    with pytest.raises(NotImplementedError, match="balanced-only"):
+        solve(_problem(n=60, lam=1.0),
+              QuantizedGWSolver(k_x=8, k_y=8, value_mode="refined",
+                                polish_iters=0),
+              key=KEY)
+    with pytest.raises(NotImplementedError, match="polish"):
+        solve(_problem(n=60, lam=1.0),
+              QuantizedGWSolver(k_x=8, k_y=8, polish_iters=3), key=KEY)
+
+
+def test_quantized_epsilon_is_dynamic_leaf():
+    """ε sweeps (outer refine ε and nested base ε) must not retrace."""
+    s1 = QuantizedGWSolver(k_x=8, k_y=8, epsilon=1e-2)
+    s2 = QuantizedGWSolver(k_x=8, k_y=8, epsilon=5e-2)
+    l1_, t1 = jax.tree_util.tree_flatten(s1)
+    l2_, t2 = jax.tree_util.tree_flatten(s2)
+    assert t1 == t2
+    assert 1e-2 in l1_ and 5e-2 in l2_
+    # nested base epsilon is a leaf too
+    s3 = QuantizedGWSolver(
+        k_x=8, k_y=8, base=repro.DenseGWSolver(epsilon=3e-2))
+    l3, t3 = jax.tree_util.tree_flatten(s3)
+    assert 3e-2 in l3
+    # a static knob change IS a structure change
+    _, t4 = jax.tree_util.tree_flatten(QuantizedGWSolver(k_x=16, k_y=8))
+    assert t4 != t1
+
+
+def test_quantized_jit_vmap_stack_matches_per_problem():
+    """Acceptance: composes with jax.jit + jax.vmap over a problem stack.
+
+    Fixed iteration budgets (tol=0) keep the batched and per-problem
+    runs on identical control flow; top-k tie reordering between the two
+    lowerings permutes block order, so couplings are compared densified.
+    """
+    B, n = 3, 60
+    base = repro.DenseGWSolver(outer_iters=10, inner_iters=200, tol=0.0,
+                               inner_tol=0.0)
+    solver = QuantizedGWSolver(k_x=24, k_y=24, base=base, refine_iters=100,
+                               refine_tol=0.0, polish_iters=3,
+                               polish_inner_iters=300)
+    probs = [_problem(seed=s, n=n) for s in range(B)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+    keys = jax.random.split(jax.random.PRNGKey(5), B)
+    out = jax.jit(jax.vmap(lambda p, k: solve(p, solver, key=k)))(stacked,
+                                                                  keys)
+    assert out.value.shape == (B,)
+    assert out.coupling.blocks.shape[0] == B
+    for i in range(B):
+        ref = solve(probs[i], solver, key=keys[i])
+        np.testing.assert_allclose(float(out.value[i]), float(ref.value),
+                                   rtol=1e-4, atol=1e-6)
+        Tb = QuantizedCoupling(*[x[i] for x in out.coupling]).todense(n, n)
+        Tr = ref.coupling.todense(n, n)
+        np.testing.assert_allclose(np.asarray(Tb), np.asarray(Tr),
+                                   atol=2e-4)
+
+
+def test_quantized_10k_cpu_completes():
+    """Acceptance: n=10k with k=√n-scale anchors completes on CPU (where
+    dense_gw's O(n³)-per-iteration loop is infeasible)."""
+    n = 10_000
+    rng = np.random.default_rng(0)
+
+    def dists(seed):
+        r = np.random.default_rng(seed)
+        x = r.standard_normal((n, 3)).astype(np.float32)
+        sq = (x ** 2).sum(1)
+        return jnp.asarray(np.sqrt(np.maximum(
+            sq[:, None] + sq[None, :] - 2 * x @ x.T, 0), dtype=np.float32))
+
+    del rng
+    a = b = jnp.ones((n,), jnp.float32) / n
+    prob = QuadraticProblem(Geometry(dists(0), a), Geometry(dists(1), b))
+    t0 = time.time()
+    out = solve(prob, QuantizedGWSolver(), key=jax.random.PRNGKey(0))
+    value = float(out.value)          # blocks until the solve finishes
+    elapsed = time.time() - t0
+    assert np.isfinite(value)
+    assert out.coupling.blocks.shape == (400, 300, 300)
+    mu, _ = out.coupling.marginals(n, n)
+    assert np.isfinite(float(mu.sum()))
+    assert elapsed < 600, f"n=10k solve took {elapsed:.0f}s"

@@ -1,0 +1,67 @@
+"""Every legacy ``repro.core.*`` entry point is a deprecation shim over
+``repro.solve`` — each one must actually raise DeprecationWarning."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    egw,
+    fgw_dense,
+    grid_spar_gw,
+    gw_dense,
+    pga_gw,
+    spar_fgw,
+    spar_gw,
+    spar_ugw,
+    ugw_dense,
+)
+
+N = 12
+KEY = jax.random.PRNGKey(0)
+
+
+def _data():
+    kx, ky = jax.random.split(KEY)
+    x = jax.random.normal(kx, (N, 2))
+    y = jax.random.normal(ky, (N, 2))
+    Cx = jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+    Cy = jnp.sqrt(jnp.sum((y[:, None] - y[None, :]) ** 2, -1))
+    a = b = jnp.ones(N) / N
+    return a, b, Cx, Cy
+
+
+FAST = dict(outer_iters=1, inner_iters=2)
+_M = jnp.zeros((N, N))
+
+SHIMS = {
+    "spar_gw": lambda a, b, Cx, Cy: spar_gw(KEY, a, b, Cx, Cy, s=2 * N,
+                                            **FAST),
+    "spar_fgw": lambda a, b, Cx, Cy: spar_fgw(KEY, a, b, Cx, Cy, _M,
+                                              s=2 * N, **FAST),
+    "spar_ugw": lambda a, b, Cx, Cy: spar_ugw(KEY, a, b, Cx, Cy, s=2 * N,
+                                              lam=1.0, **FAST),
+    "gw_dense": lambda a, b, Cx, Cy: gw_dense(a, b, Cx, Cy, **FAST),
+    "egw": lambda a, b, Cx, Cy: egw(a, b, Cx, Cy, **FAST),
+    "pga_gw": lambda a, b, Cx, Cy: pga_gw(a, b, Cx, Cy, **FAST),
+    "fgw_dense": lambda a, b, Cx, Cy: fgw_dense(a, b, Cx, Cy, _M, **FAST),
+    "ugw_dense": lambda a, b, Cx, Cy: ugw_dense(a, b, Cx, Cy, lam=1.0,
+                                                **FAST),
+    "grid_spar_gw": lambda a, b, Cx, Cy: grid_spar_gw(KEY, a, b, Cx, Cy,
+                                                      s_r=4, s_c=4, **FAST),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SHIMS))
+def test_shim_raises_deprecation_warning(name):
+    a, b, Cx, Cy = _data()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        SHIMS[name](a, b, Cx, Cy)
+    deprecations = [w for w in caught
+                    if issubclass(w.category, DeprecationWarning)
+                    and "repro.core." in str(w.message)]
+    assert deprecations, f"{name} did not warn DeprecationWarning"
+    # the message must point at the replacement entry point
+    assert any("repro.solve" in str(w.message) for w in deprecations)
