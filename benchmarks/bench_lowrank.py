@@ -1,0 +1,96 @@
+"""Low-rank scaling benchmark: lowrank_gw vs spar_gw vs quantized_gw.
+
+Wall-time and GW value over growing n on 3-D gaussian point clouds.
+lowrank_gw runs on *point-cloud* geometries (its native regime: exact
+rank-(d+2) cost factors, no n×n matrix anywhere); spar/quantized get the
+same clouds as dense distance matrices. Solvers are dropped once they
+stop being feasible on CPU (spar beyond ~2k; quantized beyond 5k unless
+REPRO_BENCH_FULL=1 — its ~70 s n=10k run is the PR 3 reference the
+low-rank solver is benchmarked against).
+
+  python benchmarks/bench_lowrank.py            # n in {1k, 2k, 5k, 10k}
+  python benchmarks/bench_lowrank.py --quick    # n=300 smoke
+  REPRO_BENCH_FULL=1 python benchmarks/bench_lowrank.py  # + quantized@10k
+
+Also appends its records to BENCH_PR4.json (--json '' disables).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, merge_bench_json, record
+
+SPAR_MAX = 2000
+QUANTIZED_MAX = 5000 if not FULL else 20_000
+
+
+def clouds(seed: int, n: int, d: int = 3):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def solvers_for(n: int):
+    import repro
+    out = {"lowrank_gw": repro.LowRankGWSolver()}
+    if n <= QUANTIZED_MAX:
+        out["quantized_gw"] = repro.QuantizedGWSolver()
+    if n <= SPAR_MAX:
+        out["spar_gw"] = repro.SparGWSolver(s=16 * n, inner_tol=1e-7,
+                                            tol=1e-5)
+    return out
+
+
+def main(quick: bool = False, json_path: str = "BENCH_PR4.json"):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+
+    sizes = (300,) if quick else (1000, 2000, 5000, 10_000)
+    key = jax.random.PRNGKey(0)
+    results = []
+    for n in sizes:
+        x = jnp.asarray(clouds(0, n))
+        y = jnp.asarray(clouds(1, n))
+        a = b = jnp.ones((n,), jnp.float32) / n
+        cloud_prob = repro.QuadraticProblem(repro.Geometry.from_points(x, a),
+                                            repro.Geometry.from_points(y, b))
+        dense_geoms = None
+        for name, solver in solvers_for(n).items():
+            if name == "lowrank_gw":
+                problem = cloud_prob
+            else:
+                if dense_geoms is None:
+                    dense_geoms = repro.QuadraticProblem(
+                        repro.Geometry(cloud_prob.geom_x.cost_matrix, a),
+                        repro.Geometry(cloud_prob.geom_y.cost_matrix, b))
+                problem = dense_geoms
+            t0 = time.time()
+            out = repro.solve(problem, solver, key=key)
+            jax.block_until_ready(out.value)
+            sec = time.time() - t0
+            record(f"lowrank/n{n}/{name}", sec * 1e6,
+                   f"value={float(out.value):.5f};"
+                   f"converged={bool(out.converged)}")
+            results.append({
+                "solver": name, "dataset": "gauss3d-lr", "loss": "l2",
+                "n": n, "wall_time_s": round(sec, 6),
+                "value": float(out.value),
+                "converged": bool(out.converged),
+                "n_iters": int(out.n_iters),
+            })
+        del cloud_prob, dense_geoms
+    if json_path:
+        merge_bench_json(json_path, "gauss3d-lr", results)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="n=300 smoke")
+    ap.add_argument("--json", default="BENCH_PR4.json",
+                    help="append records here ('' disables)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

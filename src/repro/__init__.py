@@ -12,6 +12,8 @@ from repro.api import (
     GridCoupling,
     GridGWSolver,
     GWOutput,
+    LowRankCoupling,
+    LowRankGWSolver,
     QuadraticProblem,
     QuantizedCoupling,
     QuantizedGWSolver,
@@ -31,12 +33,14 @@ __all__ = [
     "SparseCoupling",
     "GridCoupling",
     "QuantizedCoupling",
+    "LowRankCoupling",
     "solve",
     "select_solver",
     "SparGWSolver",
     "DenseGWSolver",
     "GridGWSolver",
     "QuantizedGWSolver",
+    "LowRankGWSolver",
     "get_solver",
     "register_solver",
     "available_solvers",

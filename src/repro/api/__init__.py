@@ -4,13 +4,14 @@ Pytree-native layer over the paper's solver family: build a
 ``QuadraticProblem`` from two ``Geometry``s, pick a solver config (or a
 registry name, or let ``select_solver`` pick one from the problem
 structure), and call ``repro.solve`` — every variant (GW, entropic,
-fused, unbalanced, sparse, grid, multiscale) returns the same structured
-``GWOutput`` and composes with ``jax.jit`` / ``jax.vmap``.
+fused, unbalanced, sparse, grid, multiscale, low-rank) returns the same
+structured ``GWOutput`` and composes with ``jax.jit`` / ``jax.vmap``.
 """
 from repro.api.geometry import Geometry
 from repro.api.output import (
     GridCoupling,
     GWOutput,
+    LowRankCoupling,
     QuantizedCoupling,
     SparseCoupling,
 )
@@ -25,8 +26,10 @@ from repro.api.solvers import (
     register_solver,
 )
 
-# importing the multiscale subsystem registers the "quantized_gw" solver
+# importing the multiscale / lowrank subsystems registers the
+# "quantized_gw" / "lowrank_gw" solvers
 from repro.multiscale.solver import QuantizedGWSolver  # noqa: E402
+from repro.lowrank.solver import LowRankGWSolver  # noqa: E402
 
 __all__ = [
     "Geometry",
@@ -35,12 +38,14 @@ __all__ = [
     "SparseCoupling",
     "GridCoupling",
     "QuantizedCoupling",
+    "LowRankCoupling",
     "solve",
     "select_solver",
     "SparGWSolver",
     "DenseGWSolver",
     "GridGWSolver",
     "QuantizedGWSolver",
+    "LowRankGWSolver",
     "get_solver",
     "register_solver",
     "available_solvers",

@@ -26,13 +26,22 @@ from jax import lax
 _TINY = 1e-30
 
 
+def _tree_l1(tree):
+    return jax.tree.reduce(
+        lambda acc, leaf: acc + jnp.sum(jnp.abs(leaf)), tree, jnp.float32(0))
+
+
 def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
              tol: float) -> Tuple:
     """Iterate ``T <- step_fn(T)`` up to ``max_iters`` times.
 
     step_fn — one outer PGA/entropic step (Sinkhorn projection included)
     err_fn  — diagnostic recorded per iteration (marginal ℓ1 violation)
-    tol     — stop when sum|T_new - T| / sum|T| <= tol (static float)
+    tol     — stop when sum|T_new - T| / sum|T| <= tol (static float),
+              with the sums taken over every leaf when the iterate is a
+              pytree (e.g. the (Q, R, g) factor triple of a low-rank
+              coupling) — a single-array iterate reduces to the legacy
+              scalar criterion bitwise
 
     Returns ``(T, errors, n_iters, converged)`` with ``errors`` of static
     shape (max_iters,), NaN-padded past ``n_iters``.
@@ -55,8 +64,8 @@ def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
                              T_new, T)
         i_out = jnp.where(done, i, i + 1)
         if tol > 0:                    # tol is static: predicate compiled out
-            delta = (jnp.sum(jnp.abs(T_new - T))
-                     / jnp.maximum(jnp.sum(jnp.abs(T)), _TINY))
+            num = _tree_l1(jax.tree.map(lambda new, old: new - old, T_new, T))
+            delta = num / jnp.maximum(_tree_l1(T), _TINY)
             done = done | (delta <= tol)
         return i_out, T_out, errs, done
 

@@ -3,6 +3,14 @@
 OTT-style separation: a Geometry owns the *space* (pairwise ground cost,
 marginal weights, optional node features); the QuadraticProblem owns the
 *coupling task* between two geometries; solvers own the *algorithm*.
+
+A Geometry is backed either by an explicit ``(n, n)`` cost matrix or by a
+``points`` array (an ``(n, d)`` point cloud whose implied cost is the
+squared euclidean distance matrix). Point-cloud geometries are what the
+low-rank solver family exploits: ``||x_i - x_j||²`` factors *exactly* at
+rank d+2, so the solver never materializes the n×n cost. Solvers that do
+need the dense matrix read ``cost_matrix``, which returns the explicit
+cost or assembles it from the points on demand.
 """
 from __future__ import annotations
 
@@ -18,21 +26,29 @@ def _shape(x):
 
 @dataclass(frozen=True)
 class Geometry:
-    """Cost matrix + marginal (+ optional features) for one space.
+    """Cost matrix (or point cloud) + marginal (+ optional features).
 
-    cost     — (n, n) pairwise ground cost/similarity matrix
+    cost     — (n, n) pairwise ground cost/similarity matrix; may be None
+               when ``points`` is given (the implied cost is then the
+               squared euclidean distance matrix of the points)
     weights  — (n,) marginal weights (must sum to 1 in balanced problems;
                checked at the QuadraticProblem boundary)
     features — optional (n, d) node features; when both geometries carry
                features and the problem has no explicit ``M``, the fused
                linear term is the pairwise squared euclidean feature cost
+    points   — optional (n, d) point cloud. With ``cost=None`` it *defines*
+               the geometry (squared euclidean cost); alongside an explicit
+               cost it is advisory (solvers may ignore it). Point-cloud
+               geometries unlock the exact rank-(d+2) cost factorization
+               used by ``lowrank_gw``.
     validate — init-only flag; ``False`` skips all checks (for callers
                building geometries inside ``jit``-traced code). Value
                checks are auto-skipped for tracer inputs either way.
     """
-    cost: Any
+    cost: Optional[Any]
     weights: Any
     features: Optional[Any] = None
+    points: Optional[Any] = None
     validate: InitVar[bool] = True
 
     def __post_init__(self, validate: bool = True):
@@ -43,27 +59,74 @@ class Geometry:
         """Shape checks (tracer-safe) + value checks (concrete inputs only)."""
         c, w = self.cost, self.weights
         cs, ws = _shape(c), _shape(w)
-        if cs is None or len(cs) != 2 or cs[0] != cs[1]:
+        if c is None:
+            ps = _shape(self.points)
+            if ps is None or len(ps) != 2:
+                raise ValueError(
+                    "Geometry needs an (n, n) cost matrix or an (n, d) "
+                    f"points array; got cost=None, points shape {ps}")
+            n = ps[0]
+        else:
+            if cs is None or len(cs) != 2 or cs[0] != cs[1]:
+                raise ValueError(
+                    f"Geometry.cost must be a square (n, n) matrix, got "
+                    f"shape {cs}")
+            n = cs[0]
+            if self.points is not None:
+                ps = _shape(self.points)
+                if ps is None or len(ps) != 2 or ps[0] != n:
+                    raise ValueError(
+                        f"Geometry.points must have shape ({n}, d) to match "
+                        f"cost, got shape {ps}")
+        if ws is None or len(ws) != 1 or ws[0] != n:
             raise ValueError(
-                f"Geometry.cost must be a square (n, n) matrix, got shape {cs}")
-        if ws is None or len(ws) != 1 or ws[0] != cs[0]:
-            raise ValueError(
-                f"Geometry.weights must have shape ({cs[0]},) to match cost, "
-                f"got shape {ws}")
+                f"Geometry.weights must have shape ({n},) to match the "
+                f"geometry size, got shape {ws}")
         if self.features is not None:
             fs = _shape(self.features)
-            if fs is None or len(fs) != 2 or fs[0] != cs[0]:
+            if fs is None or len(fs) != 2 or fs[0] != n:
                 raise ValueError(
-                    f"Geometry.features must have shape ({cs[0]}, d) to match "
+                    f"Geometry.features must have shape ({n}, d) to match "
                     f"cost, got shape {fs}")
         if is_concrete(w):
             import numpy as np
             if float(np.min(np.asarray(w))) < 0.0:
                 raise ValueError("Geometry.weights must be non-negative")
 
+    @classmethod
+    def from_points(cls, points, weights, features=None, validate=True):
+        """A point-cloud geometry: cost = squared euclidean distances,
+        kept implicit so low-rank solvers can factor it exactly."""
+        return cls(None, weights, features=features, points=points,
+                   validate=validate)
+
     @property
     def n(self) -> int:
-        return self.cost.shape[0]
+        if self.cost is not None:
+            return self.cost.shape[0]
+        return self.points.shape[0]
+
+    @property
+    def is_point_cloud(self) -> bool:
+        """True when the geometry carries a point cloud (its squared
+        euclidean cost factors exactly at rank d+2)."""
+        return self.points is not None
+
+    @property
+    def cost_matrix(self):
+        """The dense (n, n) cost — explicit, or assembled from the points.
+
+        Point-cloud assembly is O(n²·d) and materializes the matrix the
+        low-rank path exists to avoid; dense/spar/quantized solvers use it
+        so every solver accepts every geometry.
+        """
+        if self.cost is not None:
+            return self.cost
+        import jax.numpy as jnp
+        x = self.points
+        sq = jnp.sum(x * x, axis=-1)
+        D = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+        return jnp.maximum(D, 0.0)
 
 
-register_pytree_dataclass(Geometry, ("cost", "weights", "features"))
+register_pytree_dataclass(Geometry, ("cost", "weights", "features", "points"))

@@ -77,13 +77,68 @@ class QuantizedCoupling(NamedTuple):
         return mu, nu
 
 
+class LowRankCoupling(NamedTuple):
+    """Factored coupling T = Q diag(1/g) Rᵀ (Scetbon et al., 2021/22).
+
+    Storage is O((m + n)·r): ``q`` ∈ ℝ^{m×r} with row sums ≈ a, ``r`` ∈
+    ℝ^{n×r} with row sums ≈ b, and both column sums ≈ ``g`` ∈ Δ_r. Unlike
+    the COO containers there is no sparsity pattern — the coupling is
+    dense but *never materialized* by the solver; ``todense``/``tocoo``
+    exist for small-problem interop with the COO consumers.
+    """
+    q: Any   # (m, r) float — left factor, Q 1_r ≈ a
+    r: Any   # (n, r) float — right factor, R 1_r ≈ b
+    g: Any   # (r,)  float — shared inner marginal (≥ the solver's floor)
+
+    @property
+    def rank(self) -> int:
+        return self.g.shape[-1]
+
+    def apply(self, x, axis: int = 0):
+        """``T @ x`` (axis=0) or ``Tᵀ @ x`` (axis=1) in O((m + n)·r) —
+        the matvec contract that keeps every downstream use linear.
+        ``x`` may be a vector or a (⋅, k) stack of vectors."""
+        left, right = (self.q, self.r) if axis == 0 else (self.r, self.q)
+        y = right.T @ x                                    # (r,) or (r, k)
+        y = y / (self.g[:, None] if y.ndim > 1 else self.g)
+        return left @ y
+
+    def marginals(self, m: int = None, n: int = None):
+        """(mu, nu) of the coupling T = Q diag(1/g) Rᵀ — O((m + n)·r).
+
+        Computed from T itself (T 1 = Q diag(1/g) (Rᵀ1)), not as the
+        factor row sums: the two differ by whatever inner-marginal
+        violation (Qᵀ1, Rᵀ1 vs g) the Dykstra budget left behind, and
+        this container's contract — like every other coupling's — is to
+        report the marginals of the coupling it stores.
+        """
+        mu = self.q @ ((self.r.sum(axis=0)) / self.g)
+        nu = self.r @ ((self.q.sum(axis=0)) / self.g)
+        return mu, nu
+
+    def todense(self, m: int = None, n: int = None):
+        """Materialize the (m, n) coupling (small-problem interop only;
+        the shape is implied by the factors, args accepted for interface
+        parity with the other containers)."""
+        return (self.q / self.g[None, :]) @ self.r.T
+
+    def tocoo(self):
+        """Flatten to COO (rows, cols, vals) of length m·n — the coupling
+        is dense, so this is only for small-problem COO interop."""
+        T = self.todense()
+        m, n = T.shape
+        rows = jnp.repeat(jnp.arange(m), n)
+        cols = jnp.tile(jnp.arange(n), m)
+        return rows, cols, T.reshape(-1)
+
+
 @dataclass(frozen=True)
 class GWOutput:
     """Result of one GW solve.
 
     value     — scalar objective estimate (GW/FGW/UGW value)
     coupling  — (m, n) dense array, ``SparseCoupling``, ``GridCoupling``,
-                or ``QuantizedCoupling``
+                ``QuantizedCoupling``, or ``LowRankCoupling``
     errors    — (outer_iters,) marginal-violation ℓ1 error recorded after
                 each outer iteration; NaN beyond ``n_iters``
     converged — True iff the outer loop hit the tolerance before the bound

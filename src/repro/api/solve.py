@@ -27,6 +27,20 @@ from repro.api.solvers import get_solver
 # auto-selection size thresholds (max(m, n)); see select_solver
 AUTO_DENSE_MAX = 256
 AUTO_SPAR_MAX = 2048
+# above this, even the multiscale pipeline's quadratic stages (anchor
+# compression, O(m²k) matmuls) dominate — route to the linear-time
+# low-rank solver whenever the problem admits it
+_LOWRANK_MIN = 8192
+
+# ground losses with a Peyré decomposition L = f1 + f2 - h1·h2 (the
+# structure the low-rank gradient factorization needs)
+_LOWRANK_LOSSES = ("l2", "kl")
+
+
+def _lowrank_eligible(problem: QuadraticProblem) -> bool:
+    """lowrank_gw handles balanced, non-fused, decomposable-loss problems."""
+    return (not problem.is_fused and not problem.is_unbalanced
+            and problem.loss in _LOWRANK_LOSSES)
 
 
 def select_solver(problem: QuadraticProblem):
@@ -38,21 +52,33 @@ def select_solver(problem: QuadraticProblem):
       resolution, and needs no PRNG key;
     * ≤ 2048 — ``spar_gw`` with the paper's s = 16n support: the O(s²)
       cost assembly still beats dense O(n³)-per-iteration work;
-    * larger — ``quantized_gw`` (multiscale): the only variant whose
-      per-iteration cost does not grow with a power of n. (For
-      unbalanced problems at this scale the reported value is the
-      anchor-level estimate and the refined marginals are relaxed —
-      but spar_gw's O((16n)²)-per-iteration assembly is infeasible
-      there, so quantized is still the right default.)
-
-    Fused/unbalanced structure needs no routing beyond that — every
-    selected solver dispatches on problem structure internally.
+    * larger — ``lowrank_gw`` when the problem admits it (balanced,
+      non-fused, decomposable loss) **and** either both geometries are
+      point clouds (exact rank-(d+2) cost factors, zero n×n work) or
+      max(m, n) exceeds ``_LOWRANK_MIN`` (where even the multiscale
+      pipeline's quadratic compression stage dominates and the rank-c
+      sketch pays for itself); otherwise ``quantized_gw`` (multiscale),
+      which covers fused/unbalanced/indecomposable structure at any
+      scale. (For unbalanced problems at this scale the reported value
+      is the anchor-level estimate and the refined marginals are
+      relaxed — but spar_gw's O((16n)²)-per-iteration assembly is
+      infeasible there, so quantized is still the right default.)
     """
     size = max(problem.shape)
     if size <= AUTO_DENSE_MAX:
         return get_solver("dense_gw").default_config(size)
     if size <= AUTO_SPAR_MAX:
         return get_solver("spar_gw").default_config(size)
+    # the point-cloud fast route requires the *exact* factorization path
+    # (squared-euclidean + l2), which never materializes an n×n matrix;
+    # kl point clouds would silently densify for the sketch, so they wait
+    # for the _LOWRANK_MIN threshold like precomputed costs
+    factorizable = (problem.geom_x.is_point_cloud
+                    and problem.geom_y.is_point_cloud
+                    and problem.loss == "l2")
+    if _lowrank_eligible(problem) and (factorizable
+                                       or size > _LOWRANK_MIN):
+        return get_solver("lowrank_gw").default_config(size)
     return get_solver("quantized_gw").default_config(size)
 
 
@@ -67,7 +93,8 @@ def solve(problem: QuadraticProblem,
     """Solve a QuadraticProblem; returns a structured ``GWOutput``.
 
     solver   — a solver config instance; a registry name ("spar_gw",
-               "dense_gw", "grid_gw", "quantized_gw", ...) which selects
+               "dense_gw", "grid_gw", "quantized_gw", "lowrank_gw", ...)
+               which selects
                that solver's ``default_config`` for the problem size; or
                None to auto-select from the problem structure
                (:func:`select_solver`)

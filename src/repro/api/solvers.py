@@ -184,8 +184,8 @@ class SparGWSolver:
         return self._run_balanced(problem, key)
 
     def _run_balanced(self, problem, key) -> GWOutput:
-        Cx, a = problem.geom_x.cost, problem.geom_x.weights
-        Cy, b = problem.geom_y.cost, problem.geom_y.weights
+        Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+        Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
         m, n = a.shape[0], b.shape[0]
         probs = sampling.balanced_probs(a, b, self.shrink)
         rows, cols = sampling.sample_pairs(key, probs, self.s)
@@ -215,8 +215,8 @@ class SparGWSolver:
                         errors=errors, converged=converged, n_iters=n_iters)
 
     def _run_unbalanced(self, problem, key) -> GWOutput:
-        Cx, a = problem.geom_x.cost, problem.geom_x.weights
-        Cy, b = problem.geom_y.cost, problem.geom_y.weights
+        Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+        Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
         lam, loss, eps = problem.lam, problem.loss, self.epsilon
         m, n = a.shape[0], b.shape[0]
         scale = jnp.sqrt(jnp.sum(a) * jnp.sum(b))
@@ -299,8 +299,8 @@ class DenseGWSolver:
         return self._run_balanced(problem)
 
     def _run_balanced(self, problem) -> GWOutput:
-        Cx, a = problem.geom_x.cost, problem.geom_x.weights
-        Cy, b = problem.geom_y.cost, problem.geom_y.weights
+        Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+        Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
         loss = problem.loss
         fused = problem.is_fused
         alpha = problem.fused_penalty if fused else 1.0
@@ -335,8 +335,8 @@ class DenseGWSolver:
                         converged=converged, n_iters=n_iters)
 
     def _run_unbalanced(self, problem) -> GWOutput:
-        Cx, a = problem.geom_x.cost, problem.geom_x.weights
-        Cy, b = problem.geom_y.cost, problem.geom_y.weights
+        Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+        Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
         lam, loss, eps = problem.lam, problem.loss, self.epsilon
         T0 = a[:, None] * b[None, :] / jnp.sqrt(jnp.sum(a) * jnp.sum(b))
 
@@ -402,8 +402,8 @@ class GridGWSolver:
             raise NotImplementedError(
                 "GridGWSolver supports balanced non-fused problems only; "
                 "use SparGWSolver for fused/unbalanced variants")
-        Cx, a = problem.geom_x.cost, problem.geom_x.weights
-        Cy, b = problem.geom_y.cost, problem.geom_y.weights
+        Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+        Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
         loss = problem.loss
         m, n = a.shape[0], b.shape[0]
         probs = sampling.balanced_probs(a, b, self.shrink)

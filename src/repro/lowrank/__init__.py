@@ -1,0 +1,31 @@
+"""Low-rank GW solver subsystem (DESIGN.md §7).
+
+Couplings factored as ``T = Q diag(1/g) Rᵀ`` and costs as skinny
+``U Vᵀ`` products, making every GW iteration linear in m + n (Scetbon,
+Peyré & Cuturi, 2021/22). Importing this package registers the
+``lowrank_gw`` solver.
+"""
+from repro.lowrank.dykstra import lr_dykstra
+from repro.lowrank.factorize import (
+    CostFactors,
+    GroundFactors,
+    factor_ground,
+    khatri_rao_square,
+    sketch_factors,
+    sq_euclidean_factors,
+)
+from repro.lowrank.gradients import gw_lr_gradients, gw_lr_value
+from repro.lowrank.solver import LowRankGWSolver
+
+__all__ = [
+    "CostFactors",
+    "GroundFactors",
+    "LowRankGWSolver",
+    "factor_ground",
+    "gw_lr_gradients",
+    "gw_lr_value",
+    "khatri_rao_square",
+    "lr_dykstra",
+    "sketch_factors",
+    "sq_euclidean_factors",
+]

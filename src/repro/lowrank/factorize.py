@@ -1,0 +1,131 @@
+"""Low-rank cost factorization — the C ≈ U Vᵀ contract (DESIGN.md §7).
+
+Every per-iteration quantity of the low-rank GW solver touches the n×n
+cost matrices only through matvecs, so all a geometry has to provide is a
+pair of skinny factors. Two producers:
+
+* **exact** — a point-cloud geometry's squared euclidean distance matrix
+  factors at rank d+2 with no error (Scetbon et al., 2021):
+  ``D²_ij = ||x_i||² + ||x_j||² - 2 x_i·x_j`` is
+  ``[z | 1 | -2X] [1 | z | X]ᵀ`` with ``z = ||x_i||²``;
+* **sketch** — an arbitrary precomputed cost matrix gets a randomized
+  rank-c range sketch (Halko et al.): ``U = qr(C Ω)``, ``V = Cᵀ U``, one
+  O(n²·c) pass at setup, never again per iteration.
+
+``factor_ground`` wraps both behind the ground-loss decomposition
+``L(x, y) = f1(x) + f2(y) - h1(x) h2(y)``: it returns factors of h(C)
+(the only matrix the GW gradient applies) plus an ``apply_f`` closure for
+the rank-one f-terms of the final objective. Elementwise maps of a
+factored matrix (f1 = square for the l2 loss) stay factored through the
+Khatri-Rao identity ``(UVᵀ) ∘ (UVᵀ) = (U ⊙ U)(V ⊙ V)ᵀ`` at rank (d+2)².
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ground_cost as gc
+
+
+class CostFactors(NamedTuple):
+    """Skinny factors ``U (n×c), V (n×c)`` of a symmetric matrix ≈ U Vᵀ."""
+    u: Any
+    v: Any
+
+    @property
+    def rank(self) -> int:
+        return self.u.shape[1]
+
+    def apply(self, x):
+        """(U Vᵀ) @ x in O(n·c) — vector or (n, k) stack."""
+        return self.u @ (self.v.T @ x)
+
+    def todense(self):
+        return self.u @ self.v.T
+
+    def scale(self, s: float) -> "CostFactors":
+        return CostFactors(self.u, s * self.v)
+
+
+def sq_euclidean_factors(points) -> CostFactors:
+    """Exact rank-(d+2) factors of the squared euclidean distance matrix."""
+    z = jnp.sum(points * points, axis=1, keepdims=True)     # (n, 1)
+    one = jnp.ones_like(z)
+    U = jnp.concatenate([z, one, -2.0 * points], axis=1)    # (n, d+2)
+    V = jnp.concatenate([one, z, points], axis=1)           # (n, d+2)
+    return CostFactors(U, V)
+
+
+def khatri_rao_square(f: CostFactors) -> CostFactors:
+    """Factors of the *elementwise square* of a factored matrix.
+
+    (U Vᵀ)∘(U Vᵀ) = KR(U, U) KR(V, V)ᵀ at rank c², where KR pairs every
+    column with every column — O(n·c²) storage, exact.
+    """
+    n, c = f.u.shape
+    kr = lambda A: (A[:, :, None] * A[:, None, :]).reshape(n, c * c)
+    return CostFactors(kr(f.u), kr(f.v))
+
+
+def sketch_factors(C, rank: int, key, power_iters: int = 1) -> CostFactors:
+    """Randomized range sketch C ≈ U (Uᵀ C) with U = qr((C Cᵀ)^p C Ω).
+
+    One-time O(n²·c) setup cost; ``power_iters`` sharpens the spectrum of
+    slowly-decaying distance matrices (Halko et al. recommend 1-2).
+    """
+    n = C.shape[0]
+    omega = jax.random.normal(key, (n, rank), C.dtype)
+    Y = C @ omega
+    for _ in range(power_iters):
+        Y, _ = jnp.linalg.qr(Y)
+        Y = C @ (C.T @ Y)
+    U, _ = jnp.linalg.qr(Y)                                 # (n, rank)
+    return CostFactors(U, C.T @ U)
+
+
+class GroundFactors(NamedTuple):
+    """One geometry's low-rank view of a decomposable ground loss.
+
+    h        — factors of h(C): the matrix the quadratic gradient applies
+               every iteration, O(n·c) per matvec
+    apply_f  — x ↦ f(C) @ x for the objective's rank-one terms (factored
+               on the exact path, a dense matvec on the sketch path)
+    exact    — True on the point-cloud rank-(d+2) path
+    """
+    h: CostFactors
+    apply_f: Callable
+    exact: bool
+
+
+def factor_ground(geom, loss: str, side: str, cost_rank: int,
+                  key) -> GroundFactors:
+    """Factor one side's h-matrix (h1(Cx) or h2(Cy)) + f-term applier.
+
+    Point-cloud geometries with the l2 loss take the exact path: h is
+    linear in C there (h1 = id, h2 = 2·id), so the rank-(d+2) distance
+    factors serve directly, and f (= square) stays factored through the
+    Khatri-Rao square. Everything else materializes ``geom.cost_matrix``
+    once and sketches h(C) at rank ``cost_rank``.
+    """
+    dec = gc.get_decomposition(loss)
+    if dec is None:
+        raise NotImplementedError(
+            f"lowrank_gw needs a decomposable ground loss "
+            f"L = f1 + f2 - h1·h2; {loss!r} has no decomposition "
+            f"(known decomposable: l2, kl)")
+    h_fn = dec.h1 if side == "x" else dec.h2
+    f_fn = dec.f1 if side == "x" else dec.f2
+
+    if geom.is_point_cloud and geom.cost is None and loss == "l2":
+        base = sq_euclidean_factors(geom.points)
+        h = base if side == "x" else base.scale(2.0)        # h2 = 2y
+        fsq = khatri_rao_square(base)                       # f = y², exact
+        return GroundFactors(h=h, apply_f=fsq.apply, exact=True)
+
+    C = geom.cost_matrix
+    H = h_fn(C)
+    F = f_fn(C)
+    return GroundFactors(h=sketch_factors(H, cost_rank, key),
+                         apply_f=lambda x: F @ x, exact=False)

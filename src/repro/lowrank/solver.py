@@ -1,0 +1,192 @@
+"""``LowRankGWSolver`` — linear-time GW with rank-r couplings.
+
+Scetbon, Peyré & Cuturi's GW-LR on the unified API: the coupling is kept
+factored as ``T = Q diag(1/g) Rᵀ`` throughout, the ground costs enter
+only through skinny factors (exact rank d+2 for point-cloud geometries,
+randomized rank-c sketches otherwise — factorize.py), and each outer step
+is mirror descent on (Q, R, g) followed by a LR-Dykstra projection onto
+the coupling polytope (dykstra.py). Per-iteration cost is
+O((m + n)·r·(r + c)): the first solver family in the registry whose
+per-iteration cost is *linear* in m + n — the n ≥ 10⁵ regime opener.
+
+The config is a pytree with ``epsilon`` (entropic smoothing of the mirror
+step) and ``gamma`` (mirror step size) as dynamic leaves, so sweeps over
+either never retrace. The outer loop runs through the shared
+tolerance-aware ``pga_loop`` driver with the (Q, R, g) triple as its
+pytree iterate; jit+vmap composition comes for free like every other
+solver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.driver import pga_loop
+from repro.api.output import GWOutput, LowRankCoupling
+from repro.api.pytree import register_pytree_dataclass
+from repro.api.solvers import _require_key, register_solver
+from repro.lowrank.dykstra import lr_dykstra
+from repro.lowrank.factorize import factor_ground
+from repro.lowrank.gradients import gw_lr_gradients, gw_lr_value
+
+# floor for log(max(·, _TINY)) kernels: must be a *normal* float32 — XLA
+# CPU flushes subnormals, so 1e-38 would give log(0) = -inf and
+# 0 · (-inf) = NaN when the entropic exponent clamps to 0 (same defect
+# class as multiscale's _PAD_WEIGHT)
+_TINY = 1e-30
+
+
+def _auto_rank(m: int, n: int) -> int:
+    """Constant-by-default coupling rank (the paper's r ∈ [10, 100] regime
+    with small-problem clamping) — keeps per-iteration cost linear."""
+    return max(2, min(min(m, n) // 2, 10))
+
+
+def _auto_cost_rank(m: int, n: int) -> int:
+    # saturates (exact) below 32 points — small nested/coarse problems
+    # shouldn't pay sketch error for a matrix already tiny
+    return min(min(m, n), 32)
+
+
+def _init_factors(key, a, b, rank: int):
+    """Random full-rank positive init with exact outer marginals.
+
+    A rank-one init (Q = a gᵀ) is a *fixed point* of the mirror-descent
+    kernels — every gradient column coincides, so the factors stay
+    rank-one forever. The init must therefore break column symmetry;
+    Dykstra restores the inner-marginal constraints on the first step.
+    """
+    kq, kr = jax.random.split(key)
+    g = jnp.full((rank,), 1.0 / rank, a.dtype)
+    zq = jax.random.uniform(kq, (a.shape[0], rank), a.dtype,
+                            minval=0.5, maxval=1.5)
+    zr = jax.random.uniform(kr, (b.shape[0], rank), b.dtype,
+                            minval=0.5, maxval=1.5)
+    Q = a[:, None] * zq / zq.sum(axis=1, keepdims=True)
+    R = b[:, None] * zr / zr.sum(axis=1, keepdims=True)
+    return Q, R, g
+
+
+@dataclass(frozen=True)
+class LowRankGWSolver:
+    """Low-rank GW (Scetbon et al.) — balanced, decomposable losses.
+
+    rank          — coupling rank r (0 → auto: min(n/2, 10))
+    cost_rank     — sketch rank c for non-point-cloud geometries
+                    (0 → auto: min(n, 32), i.e. exact below 32 points);
+                    ignored on the exact rank-(d+2) point-cloud path
+    epsilon       — entropic smoothing of the mirror step (dynamic leaf;
+                    0 = pure mirror descent, the paper's default)
+    gamma         — mirror-descent step size (dynamic leaf); rescaled per
+                    step by the sup-norm of the gradients when
+                    ``gamma_rescale`` (the paper's adaptive choice, keeps
+                    the kernel exponents bounded by ±gamma)
+    g_floor       — lower bound α on the inner marginal g (rank-collapse
+                    guard inside Dykstra)
+    outer_iters   — mirror-descent step budget
+    inner_iters   — Dykstra budget per mirror step
+    tol           — outer stop: relative ℓ1 change of (Q, R, g)
+    inner_tol     — Dykstra stop: sup-norm change of the scalings
+    """
+    rank: int = 0
+    cost_rank: int = 0
+    epsilon: Any = 0.0
+    gamma: Any = 10.0
+    gamma_rescale: bool = True
+    g_floor: float = 1e-10
+    outer_iters: int = 300
+    inner_iters: int = 200
+    tol: float = 1e-6
+    inner_tol: float = 3e-6
+
+    @classmethod
+    def default_config(cls, n: int):
+        return cls()
+
+    def _resolve(self, m: int, n: int):
+        rank = self.rank or _auto_rank(m, n)
+        cost_rank = self.cost_rank or _auto_cost_rank(m, n)
+        return min(rank, min(m, n)), min(cost_rank, min(m, n))
+
+    def run(self, problem, key=None) -> GWOutput:
+        if problem.is_fused or problem.is_unbalanced:
+            raise NotImplementedError(
+                "LowRankGWSolver supports balanced non-fused problems only; "
+                "use SparGWSolver / QuantizedGWSolver for fused/unbalanced "
+                "variants")
+        _require_key(key, "LowRankGWSolver")
+        a = problem.geom_x.weights
+        b = problem.geom_y.weights
+        m, n = problem.shape
+        rank, cost_rank = self._resolve(m, n)
+        key_init, key_fx, key_fy = jax.random.split(key, 3)
+
+        fx = factor_ground(problem.geom_x, problem.loss, "x", cost_rank,
+                           key_fx)
+        fy = factor_ground(problem.geom_y, problem.loss, "y", cost_rank,
+                           key_fy)
+        state0 = _init_factors(key_init, a, b, rank)
+
+        step = partial(self._md_step, a=a, b=b, hx=fx.h, hy=fy.h)
+
+        def err_fn(state):
+            # ℓ1 marginal violation of the *coupling* T = Q diag(1/g) Rᵀ
+            # (same contract as LowRankCoupling.marginals)
+            Q, R, g = state
+            mu = Q @ (R.sum(axis=0) / g)
+            nu = R @ (Q.sum(axis=0) / g)
+            return jnp.sum(jnp.abs(mu - a)) + jnp.sum(jnp.abs(nu - b))
+        (Q, R, g), errors, n_iters, converged = pga_loop(
+            step, err_fn, state0, self.outer_iters, self.tol)
+
+        value = gw_lr_value(Q, R, g, fx, fy)
+        return GWOutput(value=value, coupling=LowRankCoupling(Q, R, g),
+                        errors=errors, converged=converged, n_iters=n_iters)
+
+    def _md_step(self, state, a, b, hx, hy):
+        """One mirror-descent + Dykstra-projection step on (Q, R, g)."""
+        Q, R, g = state
+        grads = gw_lr_gradients(Q, R, g, hx, hy)
+        # Project out gradient components the constraint set absorbs: a
+        # row-constant of ∇Q/∇R only rescales a row of the kernel, which
+        # Dykstra's row scaling (fixed row sums a/b) cancels exactly, and
+        # a global constant of ∇g cancels against Σg = 1. Removing them
+        # before the sup-norm rescale keeps γ' from being throttled by
+        # directions the projection would discard anyway.
+        gq = grads.grad_q - grads.grad_q.mean(axis=1, keepdims=True)
+        gr = grads.grad_r - grads.grad_r.mean(axis=1, keepdims=True)
+        gg = grads.grad_g - grads.grad_g.mean()
+        gamma = self.gamma
+        if self.gamma_rescale:
+            sup = jnp.maximum(jnp.max(jnp.abs(gq)),
+                              jnp.maximum(jnp.max(jnp.abs(gr)),
+                                          jnp.max(jnp.abs(gg))))
+            # the _TINY floor also keeps γ0/sup f32-finite at exact
+            # stationarity (γ0/1e-38 is inf, and inf·0 = NaN)
+            gamma = gamma / jnp.maximum(sup, _TINY)
+        # kernel of the KL-prox mirror step: K = prev^(1-γε) ⊙ exp(-γ ∇).
+        # The combination exponent must stay in [0, 1]: the rescaled γ is
+        # unbounded (γ0/sup, with sup → _TINY at stationarity), so for
+        # ε > 0 an unguarded 1 - γε flips sign and overflows the kernel.
+        # Clamping at 0 degrades gracefully to the fully-entropic step.
+        carry = jnp.maximum(1.0 - gamma * self.epsilon, 0.0)
+        K1 = jnp.exp(carry * jnp.log(jnp.maximum(Q, _TINY)) - gamma * gq)
+        K2 = jnp.exp(carry * jnp.log(jnp.maximum(R, _TINY)) - gamma * gr)
+        k3 = jnp.exp(carry * jnp.log(jnp.maximum(g, _TINY)) - gamma * gg)
+        return lr_dykstra(K1, K2, k3, a, b, self.g_floor,
+                          self.inner_iters, self.inner_tol)
+
+
+# pytree registration must precede registry registration (register_solver
+# auto-registers unregistered classes with ε as the only dynamic leaf;
+# here γ is dynamic too)
+register_pytree_dataclass(
+    LowRankGWSolver,
+    data_fields=("epsilon", "gamma"),
+    meta_fields=("rank", "cost_rank", "gamma_rescale", "g_floor",
+                 "outer_iters", "inner_iters", "tol", "inner_tol"))
+register_solver("lowrank_gw")(LowRankGWSolver)

@@ -16,6 +16,7 @@ from repro.multiscale.anchors import (
     select_anchors,
 )
 from repro.multiscale.compress import (
+    coarse_value_correction,
     compress_geometry,
     compress_linear_cost,
     compress_problem,
@@ -30,6 +31,7 @@ __all__ = [
     "medoid_refinement",
     "member_table",
     "membership",
+    "coarse_value_correction",
     "compress_geometry",
     "compress_linear_cost",
     "compress_problem",

@@ -78,8 +78,8 @@ def _linearized_factors(problem, ax, ay, Tc):
     block-constant expansion T⁰ (decomposable losses):
     E[i, j] = t1[i] + t2[j] - (Gx @ T̃ @ Gyᵀ)[i, j]."""
     dec = gc.get_decomposition(problem.loss)
-    Cx, a = problem.geom_x.cost, problem.geom_x.weights
-    Cy, b = problem.geom_y.cost, problem.geom_y.weights
+    Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+    Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
     t1 = dec.f1(Cx) @ a                              # (m,)  μ(T⁰) = a exactly
     t2 = dec.f2(Cy) @ b                              # (n,)
     Gx = dec.h1(Cx) @ membership(ax, a)              # (m, k_x)
@@ -92,8 +92,8 @@ def block_refine(problem, ax: AnchorAssignment, ay: AnchorAssignment, Tc,
                  *, cap_x: int, cap_y: int, max_pairs: int, epsilon,
                  iters: int, tol: float) -> QuantizedCoupling:
     """Expand the coarse coupling Tc into a ``QuantizedCoupling``."""
-    Cx, a = problem.geom_x.cost, problem.geom_x.weights
-    Cy, b = problem.geom_y.cost, problem.geom_y.weights
+    Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
+    Cy, b = problem.geom_y.cost_matrix, problem.geom_y.weights
     fused = problem.is_fused
     alpha = problem.fused_penalty if fused else 1.0
     decomposable = gc.get_decomposition(problem.loss) is not None

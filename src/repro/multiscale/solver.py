@@ -43,7 +43,7 @@ from repro.api.solvers import (
 from repro.core.gw import gw_objective
 from repro.kernels.spar_cost.ops import make_spar_cost_fn
 from repro.multiscale.anchors import select_anchors
-from repro.multiscale.compress import compress_problem
+from repro.multiscale.compress import coarse_value_correction, compress_problem
 from repro.multiscale.refine import block_refine
 
 # dense refined-value evaluation allowed up to this many coupling entries
@@ -57,6 +57,26 @@ _POLISH_MAX_SUPPORT = 32768
 # non-coupling fixed point whose marginal violation the refinement inherits
 _DEFAULT_BASE = DenseGWSolver(epsilon=1e-2, outer_iters=50, inner_iters=2000,
                               tol=1e-6, inner_tol=1e-8)
+
+
+def _materialized(problem):
+    """Point-cloud geometries densified once up front: the pipeline reads
+    ``cost_matrix`` from half a dozen stages, and while XLA CSEs the
+    rebuilds under jit, eager callers would pay the O(n²·d) assembly per
+    access."""
+    if problem.geom_x.cost is not None and problem.geom_y.cost is not None:
+        return problem
+    from repro.api.geometry import Geometry
+    from repro.api.problem import QuadraticProblem
+
+    def dense(g):
+        return Geometry(g.cost_matrix, g.weights, g.features,
+                        validate=False)
+
+    return QuadraticProblem(dense(problem.geom_x), dense(problem.geom_y),
+                            loss=problem.loss,
+                            fused_penalty=problem.fused_penalty,
+                            M=problem.M, lam=problem.lam, validate=False)
 
 
 def _auto_k(n: int) -> int:
@@ -99,6 +119,13 @@ class QuantizedGWSolver:
                     densifying — small problems only); "auto" picks
                     refined whenever polish ran or m·n ≤ 512², coarse
                     otherwise (and always for unbalanced problems)
+    debias        — apply the within-cluster cost-variance correction to
+                    reported coarse values (compress.coarse_value_
+                    correction): swaps the compressed f-terms for the
+                    exact fine ones, making the coarse estimate the exact
+                    fine objective of the block-constant expansion for
+                    the square loss. Balanced decomposable problems only
+                    (no-op otherwise). Two O(m²) matvecs when it fires.
     """
     k_x: int = 0
     k_y: int = 0
@@ -114,6 +141,7 @@ class QuantizedGWSolver:
     polish_iters: int = -1
     polish_inner_iters: int = 500
     value_mode: str = "auto"
+    debias: bool = True
 
     def __post_init__(self):
         if isinstance(self.base, str):
@@ -164,15 +192,16 @@ class QuantizedGWSolver:
 
     def run(self, problem, key=None) -> GWOutput:
         _require_key(key, "QuantizedGWSolver")
+        problem = _materialized(problem)
         m, n = problem.shape
         kx, ky, cap_x, cap_y, pairs = self._resolve(m, n)
         key_ax, key_ay, key_base = jax.random.split(key, 3)
 
-        ax = select_anchors(key_ax, problem.geom_x.cost,
+        ax = select_anchors(key_ax, problem.geom_x.cost_matrix,
                             problem.geom_x.weights, kx,
                             method=self.anchor_method,
                             refine_iters=self.anchor_iters)
-        ay = select_anchors(key_ay, problem.geom_y.cost,
+        ay = select_anchors(key_ay, problem.geom_y.cost_matrix,
                             problem.geom_y.weights, ky,
                             method=self.anchor_method,
                             refine_iters=self.anchor_iters)
@@ -192,9 +221,10 @@ class QuantizedGWSolver:
         if piters > 0:
             coupling, value = self._polish(problem, coupling, piters)
             if self.value_mode == "coarse":
-                value = coarse.value
+                value = self._coarse_value(problem, coarse_problem, coarse)
         else:
-            value = self._value(problem, coarse, coupling, m, n)
+            value = self._value(problem, coarse_problem, coarse, coupling,
+                                m, n)
         return GWOutput(value=value, coupling=coupling, errors=coarse.errors,
                         converged=coarse.converged, n_iters=coarse.n_iters)
 
@@ -206,7 +236,8 @@ class QuantizedGWSolver:
         m, n = problem.shape
         rows, cols, vals = coupling.tocoo()
         in_support = vals > 0
-        cost_fn = make_spar_cost_fn(problem.geom_x.cost, problem.geom_y.cost,
+        cost_fn = make_spar_cost_fn(problem.geom_x.cost_matrix,
+                                    problem.geom_y.cost_matrix,
                                     rows, cols, problem.loss)
         fused = problem.is_fused
         alpha = problem.fused_penalty if fused else 1.0
@@ -234,7 +265,26 @@ class QuantizedGWSolver:
 
     # -- value without polish ----------------------------------------------
 
-    def _value(self, problem, coarse, coupling, m: int, n: int):
+    def _coarse_value(self, problem, coarse_problem, coarse):
+        """The anchor-level objective, debiased when the structure allows
+        (balanced decomposable problems; see compress.coarse_value_
+        correction — unbalanced coarse values use the coupling's own
+        marginals, which the correction's constant-f-term identity does
+        not cover)."""
+        if not self.debias or problem.is_unbalanced:
+            return coarse.value
+        correction = coarse_value_correction(problem, coarse_problem)
+        if correction is None:
+            return coarse.value
+        if problem.is_fused:
+            # the f-terms enter the fused objective α-weighted
+            # (C_fu = α·L⊗T + (1-α)·M); the explicit-M linear term
+            # aggregates exactly, so only the quadratic gap is corrected
+            correction = problem.fused_penalty * correction
+        return coarse.value + correction
+
+    def _value(self, problem, coarse_problem, coarse, coupling, m: int,
+               n: int):
         refined_ok = not problem.is_unbalanced
         if self.value_mode == "refined" and not refined_ok:
             raise NotImplementedError(
@@ -251,10 +301,10 @@ class QuantizedGWSolver:
             self.value_mode == "auto" and refined_ok
             and m * n <= _REFINED_VALUE_MAX)
         if not use_refined:
-            return coarse.value
+            return self._coarse_value(problem, coarse_problem, coarse)
         T = coupling.todense(m, n)
-        quad = gw_objective(problem.geom_x.cost, problem.geom_y.cost, T,
-                            problem.loss)
+        quad = gw_objective(problem.geom_x.cost_matrix,
+                            problem.geom_y.cost_matrix, T, problem.loss)
         if problem.is_fused:
             alpha = problem.fused_penalty
             return alpha * quad + (1.0 - alpha) * jnp.sum(
@@ -268,5 +318,5 @@ register_pytree_dataclass(
     meta_fields=("k_x", "k_y", "max_members", "max_pairs", "anchor_method",
                  "anchor_iters", "compress_metric", "refine_iters",
                  "refine_tol", "polish_iters", "polish_inner_iters",
-                 "value_mode"))
+                 "value_mode", "debias"))
 register_solver("quantized_gw")(QuantizedGWSolver)

@@ -368,6 +368,46 @@ def test_select_solver_heuristic():
                              fused_penalty=0.5)), D)
 
 
+def test_select_solver_lowrank_rung():
+    """The low-rank rung of the auto-routing ladder: factorizable
+    point-cloud problems above the spar threshold, and any eligible
+    problem above _LOWRANK_MIN, route to lowrank_gw."""
+    from repro import LowRankGWSolver as L
+    from repro import QuantizedGWSolver as Q
+    from repro import SparGWSolver as S
+    from repro import select_solver
+    from repro.api.solve import _LOWRANK_MIN
+
+    def cloud(n, loss="l2", **kw):
+        a = jnp.ones(n) / n
+        g = Geometry(None, a, points=jnp.zeros((n, 2)), validate=False)
+        return QuadraticProblem(g, g, loss=loss, validate=False, **kw)
+
+    def shaped(n, **kw):
+        a = jnp.ones(n) / n
+        g = Geometry(jnp.zeros((n, n)), a, validate=False)
+        return QuadraticProblem(g, g, validate=False, **kw)
+
+    # point clouds: lowrank as soon as spar's O(s²) stops paying off
+    assert isinstance(select_solver(cloud(4000)), L)
+    # ... but below the spar threshold the existing ladder is untouched
+    assert isinstance(select_solver(cloud(1000)), S)
+    # dense-cost problems keep quantized until _LOWRANK_MIN
+    assert isinstance(select_solver(shaped(4000)), Q)
+    assert isinstance(select_solver(shaped(_LOWRANK_MIN + 1)), L)
+    # structure lowrank can't handle stays on quantized at any size
+    assert isinstance(select_solver(cloud(4000, lam=1.0)), Q)
+    assert isinstance(select_solver(shaped(_LOWRANK_MIN + 1, lam=1.0)), Q)
+    assert isinstance(select_solver(cloud(4000, loss="l1")), Q)
+    # kl point clouds can't use the exact factorization (it needs
+    # squared-euclidean h), so they wait for the _LOWRANK_MIN threshold
+    assert isinstance(select_solver(cloud(4000, loss="kl")), Q)
+    assert isinstance(select_solver(cloud(_LOWRANK_MIN + 1, loss="kl")), L)
+    big_M = jnp.zeros((4000, 4000))
+    assert isinstance(
+        select_solver(cloud(4000, M=big_M, fused_penalty=0.5)), Q)
+
+
 def test_solve_with_no_solver_auto_selects():
     out = solve(_problem())          # N=20 -> dense_gw, no key needed
     ref = solve(_problem(), DenseGWSolver.default_config(N))

@@ -1,0 +1,430 @@
+"""Low-rank GW subsystem: cost factorization exactness, LR-Dykstra
+feasibility, the registered lowrank_gw solver (accuracy vs converged
+dense_gw across ranks, coupling feasibility, jit+vmap composition,
+degenerate marginals), the LowRankCoupling container, point-cloud
+Geometry support, and multiscale nesting in both directions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import (
+    Geometry,
+    LowRankCoupling,
+    LowRankGWSolver,
+    QuadraticProblem,
+    QuantizedGWSolver,
+    solve,
+)
+from repro.core.gw import gw_objective
+from repro.lowrank import (
+    khatri_rao_square,
+    lr_dykstra,
+    sketch_factors,
+    sq_euclidean_factors,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+# heavy-projection config for feasibility-critical assertions
+TIGHT = dict(inner_iters=2000, inner_tol=1e-9)
+DENSE_REF = repro.DenseGWSolver(epsilon=1e-2, outer_iters=80,
+                                inner_iters=2000, tol=1e-6, inner_tol=1e-8)
+
+
+def _uniform(n):
+    return jnp.ones(n) / n
+
+
+def _cloud_problem(seed=0, n=150, d=2, scale_y=1.2):
+    """Independent gaussian point clouds as point-cloud geometries."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d))
+    y = jax.random.normal(ky, (n, d)) * scale_y
+    return QuadraticProblem(Geometry.from_points(x, _uniform(n)),
+                            Geometry.from_points(y, _uniform(n)))
+
+
+def _atoms_problem(seed=1, n=150, k=4):
+    """n points on k distinct locations, second space a 1.5× dilation.
+
+    The optimal coupling is the cluster-identity block coupling — exactly
+    rank k — so every rank ≥ k must recover the same value, and that
+    value is computable in closed form (`_atoms_optimum`).
+    """
+    centers = jax.random.normal(jax.random.PRNGKey(seed), (k, 2)) * 3.0
+    assign = jnp.arange(n) % k
+    x = centers[assign]
+    y = 1.5 * x
+    prob = QuadraticProblem(Geometry.from_points(x, _uniform(n)),
+                            Geometry.from_points(y, _uniform(n)))
+    return prob, assign
+
+
+def _atoms_optimum(prob, assign):
+    n = assign.shape[0]
+    B = (assign[:, None] == assign[None, :]).astype(jnp.float32)
+    T_blk = B / B.sum(axis=1, keepdims=True) / n
+    return float(gw_objective(prob.geom_x.cost_matrix,
+                              prob.geom_y.cost_matrix, T_blk, "l2"))
+
+
+def _densified(prob):
+    return QuadraticProblem(
+        Geometry(prob.geom_x.cost_matrix, prob.geom_x.weights),
+        Geometry(prob.geom_y.cost_matrix, prob.geom_y.weights))
+
+
+# ---------------------------------------------------------------------------
+# cost factorization
+# ---------------------------------------------------------------------------
+
+def test_sq_euclidean_factors_exact_rank_d_plus_2():
+    """||x_i - x_j||² factors at rank d+2 with ~fp32-roundoff error."""
+    n, d = 120, 3
+    x = jax.random.normal(KEY, (n, d))
+    f = sq_euclidean_factors(x)
+    assert f.u.shape == (n, d + 2) and f.v.shape == (n, d + 2)
+    D = jnp.sum((x[:, None] - x[None, :]) ** 2, -1)
+    err = float(jnp.abs(f.todense() - D).max())
+    assert err <= 1e-5 * float(D.max())
+    # matvec contract agrees with the dense product
+    v = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    np.testing.assert_allclose(np.asarray(f.apply(v)), np.asarray(D @ v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_khatri_rao_square_factors_elementwise_square():
+    n, d = 40, 2
+    f = sq_euclidean_factors(jax.random.normal(KEY, (n, d)))
+    sq = khatri_rao_square(f)
+    assert sq.rank == f.rank ** 2
+    np.testing.assert_allclose(np.asarray(sq.todense()),
+                               np.asarray(f.todense() ** 2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sketch_factors_improve_with_rank():
+    """Randomized range sketch: near-exact at full rank, error decreasing
+    in the sketch rank."""
+    n = 80
+    x = jax.random.normal(KEY, (n, 3))
+    C = Geometry.from_points(x, _uniform(n)).cost_matrix
+    errs = {}
+    for c in (8, 32, n):
+        f = sketch_factors(C, c, jax.random.PRNGKey(2))
+        errs[c] = float(jnp.linalg.norm(f.todense() - C)
+                        / jnp.linalg.norm(C))
+    assert errs[n] <= 1e-4
+    assert errs[32] <= errs[8] + 1e-6
+    assert errs[32] <= 0.5
+
+
+# ---------------------------------------------------------------------------
+# LR-Dykstra projection
+# ---------------------------------------------------------------------------
+
+def test_lr_dykstra_projects_onto_coupling_polytope():
+    m, n, r = 80, 60, 6
+    k1, k2, k3, ka, kb = jax.random.split(KEY, 5)
+    K1 = jax.random.uniform(k1, (m, r), minval=0.1, maxval=1.0)
+    K2 = jax.random.uniform(k2, (n, r), minval=0.1, maxval=1.0)
+    k3v = jax.random.uniform(k3, (r,), minval=0.1, maxval=1.0)
+    a = jax.random.dirichlet(ka, jnp.ones(m))
+    b = jax.random.dirichlet(kb, jnp.ones(n))
+    Q, R, g = lr_dykstra(K1, K2, k3v, a, b, 1e-10, 5000, 1e-9)
+    assert float(jnp.abs(Q.sum(1) - a).sum()) < 1e-5
+    assert float(jnp.abs(R.sum(1) - b).sum()) < 1e-5
+    assert float(jnp.abs(Q.sum(0) - g).sum()) < 1e-5
+    assert float(jnp.abs(R.sum(0) - g).sum()) < 1e-5
+    np.testing.assert_allclose(float(g.sum()), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# solver accuracy (acceptance: ≤5% rel error vs converged dense_gw, n≤200)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rank", [4, 10, 75])
+def test_lowrank_matches_dense_within_5pct_across_ranks(rank):
+    """On a problem whose optimum is exactly low-rank (atom clusters +
+    dilation), every rank r ≥ 4 must land within 5% of the converged
+    dense_gw value — and of the closed-form optimum.
+
+    The atoms construction is the honest test bed for small ranks: on
+    generic clouds the plug-in value of a rank-4 coupling is dominated by
+    the within-block residual the rank constraint itself imposes (and
+    dense PGA is the unreliable side on most clustered seeds — it stalls
+    at symmetric mixing fixed points ~3× above the optimum lowrank_gw
+    finds; this seed is one where dense converges to the optimum too).
+    """
+    n = 150
+    prob, assign = _atoms_problem(seed=1, n=n)
+    ref = solve(_densified(prob), DENSE_REF)
+    opt = _atoms_optimum(prob, assign)
+    out = solve(prob, LowRankGWSolver(rank=rank), key=jax.random.PRNGKey(7))
+    v = float(out.value)
+    assert abs(v - float(ref.value)) / abs(float(ref.value)) <= 0.05
+    assert abs(v - opt) / abs(opt) <= 0.05
+    assert isinstance(out.coupling, LowRankCoupling)
+
+
+def test_lowrank_halfrank_at_least_dense_quality_on_clouds():
+    """r = n/2 on 2-D clouds: the plug-in objective must be within 5% of
+    converged dense_gw *or better* (mirror descent routinely finds lower
+    objectives than dense PGA here — both are local methods on a
+    nonconvex problem, so only the upper side is a defect)."""
+    for seed in (0, 1):
+        prob = _cloud_problem(seed=seed, n=150)
+        ref = float(solve(_densified(prob), DENSE_REF).value)
+        out = solve(prob, LowRankGWSolver(rank=75),
+                    key=jax.random.PRNGKey(7))
+        assert float(out.value) <= 1.05 * ref, (
+            f"seed {seed}: lowrank {float(out.value):.4f} vs dense "
+            f"{ref:.4f}")
+        # and the reported value is the true objective of the coupling
+        T = out.coupling.todense()
+        direct = float(gw_objective(prob.geom_x.cost_matrix,
+                                    prob.geom_y.cost_matrix, T, "l2"))
+        np.testing.assert_allclose(float(out.value), direct, rtol=1e-3)
+
+
+def test_lowrank_coupling_feasibility():
+    """ℓ1 marginal error of the output coupling < 1e-4 with a tight inner
+    projection budget."""
+    n = 120
+    prob = _cloud_problem(seed=0, n=n)
+    out = solve(prob, LowRankGWSolver(rank=10, **TIGHT),
+                key=jax.random.PRNGKey(7))
+    mu, nu = out.coupling.marginals()
+    err = float(jnp.abs(mu - prob.geom_x.weights).sum()
+                + jnp.abs(nu - prob.geom_y.weights).sum())
+    assert err < 1e-4, f"marginal violation {err:.2e}"
+    # g is a probability vector bounded away from rank collapse
+    np.testing.assert_allclose(float(out.coupling.g.sum()), 1.0, rtol=1e-4)
+    assert float(out.coupling.g.min()) >= 1e-10
+
+
+def test_lowrank_sketch_path_matches_exact_path():
+    """A dense-cost geometry (sketch path) must land near the point-cloud
+    (exact-factor) path on the same problem when the sketch rank is
+    saturating."""
+    n = 100
+    prob = _cloud_problem(seed=3, n=n)
+    exact = solve(prob, LowRankGWSolver(rank=10), key=jax.random.PRNGKey(7))
+    sk = solve(_densified(prob), LowRankGWSolver(rank=10, cost_rank=n),
+               key=jax.random.PRNGKey(7))
+    np.testing.assert_allclose(float(sk.value), float(exact.value),
+                               rtol=2e-2)
+
+
+def test_lowrank_kl_loss_runs():
+    """kl is decomposable — the sketch path must handle its h = log C."""
+    n = 40
+    prob = _densified(_cloud_problem(seed=2, n=n))
+    prob = QuadraticProblem(prob.geom_x, prob.geom_y, loss="kl")
+    out = solve(prob, LowRankGWSolver(rank=6, outer_iters=30),
+                key=jax.random.PRNGKey(7))
+    assert np.isfinite(float(out.value))
+
+
+# ---------------------------------------------------------------------------
+# structure: registry, pytree leaves, jit+vmap
+# ---------------------------------------------------------------------------
+
+def test_lowrank_registered():
+    assert "lowrank_gw" in repro.available_solvers()
+    assert repro.get_solver("lowrank_gw") is LowRankGWSolver
+
+
+def test_lowrank_requires_key():
+    with pytest.raises(ValueError, match="PRNGKey"):
+        solve(_cloud_problem(n=30), LowRankGWSolver(rank=4))
+
+
+def test_lowrank_rejects_unsupported_variants():
+    n = 30
+    prob = _densified(_cloud_problem(n=n))
+    with pytest.raises(NotImplementedError, match="balanced"):
+        solve(QuadraticProblem(prob.geom_x, prob.geom_y, lam=1.0),
+              LowRankGWSolver(rank=4), key=KEY)
+    M = jnp.zeros((n, n))
+    with pytest.raises(NotImplementedError, match="balanced"):
+        solve(QuadraticProblem(prob.geom_x, prob.geom_y, M=M,
+                               fused_penalty=0.5),
+              LowRankGWSolver(rank=4), key=KEY)
+    with pytest.raises(NotImplementedError, match="decomposable"):
+        solve(QuadraticProblem(prob.geom_x, prob.geom_y, loss="l1"),
+              LowRankGWSolver(rank=4), key=KEY)
+
+
+def test_lowrank_epsilon_and_gamma_are_dynamic_leaves():
+    """ε and γ sweeps must not retrace; static knobs must."""
+    s1 = LowRankGWSolver(rank=8, epsilon=0.0, gamma=10.0)
+    s2 = LowRankGWSolver(rank=8, epsilon=1e-2, gamma=30.0)
+    l1_, t1 = jax.tree_util.tree_flatten(s1)
+    l2_, t2 = jax.tree_util.tree_flatten(s2)
+    assert t1 == t2
+    assert l1_ == [0.0, 10.0] and l2_ == [1e-2, 30.0]
+    _, t3 = jax.tree_util.tree_flatten(LowRankGWSolver(rank=16))
+    assert t3 != t1
+
+
+def test_lowrank_jit_vmap_stack_matches_per_problem():
+    """Acceptance: composes with jax.jit + jax.vmap over a problem stack.
+
+    tol=0 keeps batched and per-problem runs on identical control flow.
+    """
+    B, n = 3, 60
+    solver = LowRankGWSolver(rank=6, outer_iters=25, inner_iters=100,
+                             tol=0.0, inner_tol=0.0)
+    probs = [_cloud_problem(seed=s, n=n) for s in range(B)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+    keys = jax.random.split(jax.random.PRNGKey(5), B)
+    out = jax.jit(jax.vmap(lambda p, k: solve(p, solver, key=k)))(stacked,
+                                                                  keys)
+    assert out.value.shape == (B,)
+    assert out.coupling.q.shape == (B, n, 6)
+    for i in range(B):
+        ref = solve(probs[i], solver, key=keys[i])
+        np.testing.assert_allclose(float(out.value[i]), float(ref.value),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.coupling.g[i]),
+                                   np.asarray(ref.coupling.g), atol=1e-5)
+
+
+def test_lowrank_entropic_step_finite_at_stationarity():
+    """ε > 0 with vanishing gradients (here: identically-zero costs) is
+    the worst case for the rescaled mirror step — γ = γ0/sup must not
+    overflow f32 to inf (inf·0 = NaN) and the KL-prox exponent 1 - γε
+    must stay clamped at 0 rather than flipping sign."""
+    n = 20
+    a = _uniform(n)
+    z = jnp.zeros((n, 2))
+    prob = QuadraticProblem(Geometry.from_points(z, a),
+                            Geometry.from_points(z, a))
+    for eps in (0.0, 1e-2):
+        out = solve(prob, LowRankGWSolver(rank=4, epsilon=eps,
+                                          outer_iters=10), key=KEY)
+        assert np.isfinite(float(out.value))
+        assert bool(jnp.all(jnp.isfinite(out.coupling.q)))
+    # an exactly-zero marginal weight zeroes a Q row; with ε > 0 the
+    # clamped exponent hits 0·log(floor) — the floor must be a normal
+    # float32 (XLA CPU subnormal flush) or this NaNs
+    aw = jnp.ones(n).at[5].set(0.0)
+    aw = aw / aw.sum()
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 2))
+    y = jax.random.normal(jax.random.PRNGKey(4), (n, 2))
+    pz = QuadraticProblem(Geometry.from_points(x, aw),
+                          Geometry.from_points(y, _uniform(n)))
+    out = solve(pz, LowRankGWSolver(rank=4, epsilon=5e-2, outer_iters=20),
+                key=KEY)
+    assert np.isfinite(float(out.value))
+
+
+def test_lowrank_degenerate_weights_solve_is_finite():
+    """~All mass on one point (mirrors test_sampling's edge case): the
+    solve must stay finite and feasible."""
+    n = 24
+    a = jnp.full((n,), 1e-10).at[3].set(1.0)
+    a = a / a.sum()
+    kx, ky = jax.random.split(KEY)
+    prob = QuadraticProblem(
+        Geometry.from_points(jax.random.normal(kx, (n, 2)), a),
+        Geometry.from_points(jax.random.normal(ky, (n, 2)), _uniform(n)))
+    out = solve(prob, LowRankGWSolver(rank=4, outer_iters=30), key=KEY)
+    assert np.isfinite(float(out.value))
+    assert bool(jnp.all(jnp.isfinite(out.coupling.q)))
+    mu, nu = out.coupling.marginals()
+    assert float(jnp.abs(nu - _uniform(n)).sum()) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# LowRankCoupling container
+# ---------------------------------------------------------------------------
+
+def test_lowrank_coupling_container_contract():
+    n = 50
+    out = solve(_cloud_problem(seed=0, n=n), LowRankGWSolver(rank=5),
+                key=KEY)
+    c = out.coupling
+    assert c.rank == 5
+    T = c.todense(n, n)
+    assert T.shape == (n, n)
+    mu, nu = c.marginals(n, n)
+    np.testing.assert_allclose(np.asarray(T.sum(1)), np.asarray(mu),
+                               atol=1e-6)
+    rows, cols, vals = c.tocoo()
+    assert rows.shape == cols.shape == vals.shape == (n * n,)
+    np.testing.assert_allclose(float(vals.sum()), float(T.sum()), rtol=1e-5)
+    # apply == dense matvec, both axes
+    v = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    np.testing.assert_allclose(np.asarray(c.apply(v)), np.asarray(T @ v),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c.apply(v, axis=1)),
+                               np.asarray(T.T @ v), atol=1e-6)
+    # GWOutput.coupling_dense goes through todense
+    np.testing.assert_array_equal(np.asarray(out.coupling_dense(n, n)),
+                                  np.asarray(T))
+
+
+# ---------------------------------------------------------------------------
+# point-cloud Geometry
+# ---------------------------------------------------------------------------
+
+def test_point_cloud_geometry_cost_matrix():
+    n, d = 30, 3
+    x = jax.random.normal(KEY, (n, d))
+    g = Geometry.from_points(x, _uniform(n))
+    assert g.is_point_cloud and g.n == n
+    D = jnp.sum((x[:, None] - x[None, :]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(g.cost_matrix), np.asarray(D),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_point_cloud_geometry_validation():
+    with pytest.raises(ValueError, match="points"):
+        Geometry(None, _uniform(10))
+    with pytest.raises(ValueError, match="weights"):
+        Geometry.from_points(jnp.zeros((10, 2)), _uniform(11))
+    # explicit cost + mismatched points
+    with pytest.raises(ValueError, match="points"):
+        Geometry(jnp.zeros((10, 10)), _uniform(10),
+                 points=jnp.zeros((9, 2)))
+
+
+def test_dense_solver_accepts_point_cloud_geometry():
+    """Non-lowrank solvers materialize the cost from the points."""
+    prob = _cloud_problem(seed=0, n=40)
+    out = solve(prob, repro.DenseGWSolver(outer_iters=5, inner_iters=50))
+    ref = solve(_densified(prob),
+                repro.DenseGWSolver(outer_iters=5, inner_iters=50))
+    np.testing.assert_allclose(float(out.value), float(ref.value),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# multiscale nesting (acceptance: lowrank_gw as QuantizedGWSolver.base)
+# ---------------------------------------------------------------------------
+
+def test_quantized_nests_lowrank_base_end_to_end():
+    """lowrank_gw seeds the multiscale pipeline: the coarse anchor problem
+    is solved low-rank, block_refine expands its densified coupling."""
+    n = 120
+    prob = _densified(_cloud_problem(seed=0, n=n))
+    named = QuantizedGWSolver(k_x=24, k_y=24, base="lowrank_gw")
+    assert isinstance(named.base, LowRankGWSolver)
+    out = solve(prob, named, key=jax.random.PRNGKey(5))
+    assert np.isfinite(float(out.value))
+    mu, nu = out.coupling.marginals(n, n)
+    # k ≪ n refinement keeps marginals only up to top-pair coverage of
+    # the coarse coupling (ROADMAP known gap); the low-rank coarse
+    # coupling at this k actually covers better than a dense base
+    # (~0.22 vs ~0.98 ℓ1 here) — assert it stays in that regime
+    assert float(jnp.abs(mu - prob.geom_x.weights).sum()
+                 + jnp.abs(nu - prob.geom_y.weights).sum()) < 0.3
+    # instance nesting with an explicit rank
+    inst = QuantizedGWSolver(
+        k_x=24, k_y=24, base=LowRankGWSolver(rank=8, outer_iters=100))
+    assert np.isfinite(float(solve(prob, inst,
+                                   key=jax.random.PRNGKey(5)).value))
