@@ -1,0 +1,165 @@
+"""Fault-injection recovery-rate benchmark for the health layer.
+
+Sweeps a fault matrix (solver family × fault kind × site × transience)
+on a fixed moon-dataset problem and classifies every cell:
+
+  * silent      — output is non-finite / mass-collapsed but the status
+                  says healthy. The bug class this layer exists to
+                  kill; the silent rate must be 0.
+  * detected    — solve came back flagged (DIVERGED / STALLED); for
+                  these the bench then measures the fallback ladder
+                  (fraction recovered to a finite healthy coupling by
+                  ``solve(..., on_failure="fallback")``).
+  * rescued     — transient fault absorbed in-jit by an ε-rescue
+                  restart (healthy status, n_rescues ≥ 1, finite);
+  * self-healed — fault neutralized by the algorithm itself (e.g. an
+                  "overflow"-scaled or zeroed iterate renormalized by
+                  the next Sinkhorn marginal projection) — a benign
+                  outcome, not a miss.
+
+For ``quantized_gw`` the fault is injected into the nested coarse
+``base`` solver (its own ``fault`` field targets only the short polish
+loop; the coarse solve is where mid-pipeline divergence lives).
+
+The EXPERIMENTS.md §"Health & recovery" table is generated from this
+run. Wall-time per cell is also recorded (the health machinery's cost
+is the difference against the fault-free baseline).
+
+  python benchmarks/bench_health.py            # full matrix, n=60
+  python benchmarks/bench_health.py --quick    # nan/inf × iterate only
+
+Appends its records to BENCH_PR6.json (--json '' disables).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import merge_bench_json, record
+
+SOLVERS = ("dense_gw", "spar_gw", "grid_gw", "lowrank_gw", "quantized_gw")
+FAULT_ITER = 2
+
+
+def _configs(n: int):
+    import repro
+    return {
+        "dense_gw": repro.DenseGWSolver(tol=1e-6, inner_tol=1e-8,
+                                        outer_iters=10),
+        "spar_gw": repro.SparGWSolver(s=8 * n, outer_iters=10,
+                                      inner_tol=1e-8),
+        "grid_gw": repro.GridGWSolver(s_r=16, s_c=16, outer_iters=10,
+                                      inner_tol=1e-8),
+        "lowrank_gw": repro.LowRankGWSolver(outer_iters=40),
+        "quantized_gw": repro.QuantizedGWSolver(refine_iters=50,
+                                                polish_iters=2,
+                                                polish_inner_iters=50),
+    }
+
+
+def _is_finite_out(out, n: int) -> bool:
+    import numpy as np
+    T = np.asarray(out.coupling_dense(n, n))
+    return bool(np.all(np.isfinite(T)) and np.abs(T).sum() > 1e-12
+                and np.isfinite(float(out.value)))
+
+
+def _with_fault(base, fault, max_rescues):
+    """Attach a fault to a solver config — on the nested coarse base for
+    quantized (see module docstring), directly otherwise."""
+    if type(base).name == "quantized_gw":
+        return dataclasses.replace(
+            base, base=dataclasses.replace(base.base, fault=fault,
+                                           max_rescues=max_rescues))
+    return dataclasses.replace(base, fault=fault, max_rescues=max_rescues)
+
+
+def main(quick: bool = False, n: int = 60,
+         json_path: str = "BENCH_PR6.json") -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro
+    from benchmarks.datasets import DATASETS
+    from repro.health import FaultSpec
+
+    kinds = ("nan", "inf") if quick else ("nan", "inf", "overflow", "zero")
+    sites = ("iterate",) if quick else ("iterate", "cost")
+    key = jax.random.PRNGKey(0)
+
+    a, b, Cx, Cy = map(jnp.asarray, DATASETS["moon"](n))
+    problem = repro.QuadraticProblem(repro.Geometry(Cx, a),
+                                     repro.Geometry(Cy, b), loss="l2")
+
+    results = []
+    for name, base in _configs(n).items():
+        silent = detected = rescued = self_healed = fell_back = 0
+        n_cells = 0
+        t0 = time.time()
+        for kind in kinds:
+            for site in sites:
+                for persistent in (False, True):
+                    n_cells += 1
+                    fault = FaultSpec(at_iter=FAULT_ITER, kind=kind,
+                                      site=site, persistent=persistent)
+                    # transient faults exercise the in-jit rescue path;
+                    # persistent ones exhaust it and exercise fallback
+                    solver = _with_fault(
+                        base, fault, max_rescues=0 if persistent else 2)
+                    out = repro.solve(problem, solver, key=key)
+                    flagged = bool(np.any(np.asarray(out.status.code) >= 2))
+                    n_resc = int(np.max(np.asarray(out.status.n_rescues)))
+                    finite = _is_finite_out(out, n)
+                    if flagged:
+                        detected += 1
+                        fb = repro.solve(problem, solver, key=key,
+                                         on_failure="fallback")
+                        if (not bool(np.any(
+                                np.asarray(fb.status.code) >= 2))
+                                and _is_finite_out(fb, n)):
+                            fell_back += 1
+                    elif not finite:
+                        silent += 1          # healthy status, broken output
+                    elif n_resc > 0:
+                        rescued += 1
+                    else:
+                        self_healed += 1
+        wall = time.time() - t0
+        row = {
+            "solver": name,
+            "dataset": "health-faults",
+            "n": n,
+            "fault_cells": n_cells,
+            "silent": silent,
+            "detected": detected,
+            "rescued": rescued,
+            "self_healed": self_healed,
+            "fallback_recovered": fell_back,
+            "fallback_rate": round(fell_back / max(detected, 1), 3),
+            "wall_time_s": round(wall, 3),
+        }
+        results.append(row)
+        record(f"health/faults/n{n}/{name}", wall * 1e6 / n_cells,
+               f"silent={silent};detected={detected};rescued={rescued};"
+               f"self_healed={self_healed};"
+               f"fallback={fell_back}/{detected};cells={n_cells}")
+    if json_path:
+        merge_bench_json(json_path, "health-faults", results)
+    total_silent = sum(r["silent"] for r in results)
+    print(f"# silent corruption cells: {total_silent} "
+          f"(must be 0 across {sum(r['fault_cells'] for r in results)})")
+    if total_silent:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="nan/inf × iterate-site only (CI smoke)")
+    ap.add_argument("--n", type=int, default=60)
+    ap.add_argument("--json", default="BENCH_PR6.json")
+    print("name,us_per_call,derived")
+    args = ap.parse_args()
+    main(quick=args.quick, n=args.n, json_path=args.json)

@@ -87,7 +87,8 @@ def bench_solver(name: str, n: int = 120, loss: str = "l2", reps: int = 3,
     key = jax.random.PRNGKey(0)
     sec, out = timed(lambda: repro.solve(problem, solver, key=key),
                      reps=reps)
+    status = out.status.describe() if out.status is not None else "UNKNOWN"
     record(f"solve/{dataset}/{loss}/n{n}/{name}", sec * 1e6,
            f"value={float(out.value):.5f};n_iters={int(out.n_iters)};"
-           f"converged={bool(out.converged)}")
+           f"converged={bool(out.converged)};status={status}")
     return sec, out

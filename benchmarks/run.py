@@ -38,8 +38,26 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
             f"{', '.join(repro.available_solvers())}")
     print("name,us_per_call,derived")
     results = []
+    failures = []
     for name in names:
-        sec, out = bench_solver(name, n=n, loss=loss, reps=reps)
+        # a failing solver records a failure row and the suite moves on —
+        # one broken rung must not abort the whole benchmark run
+        try:
+            sec, out = bench_solver(name, n=n, loss=loss, reps=reps)
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            results.append({
+                "solver": name,
+                "dataset": "moon",
+                "loss": loss,
+                "n": n,
+                "status": "failed",
+                "error": f"{type(exc).__name__}: {exc}",
+            })
+            continue
+        status = (out.status.describe() if out.status is not None
+                  else "UNKNOWN")
         results.append({
             "solver": name,
             "dataset": "moon",
@@ -49,9 +67,13 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
             "value": float(out.value),
             "converged": bool(out.converged),
             "n_iters": int(out.n_iters),
+            "status": status,
         })
     if json_path:
         merge_bench_json(json_path, "moon", results)
+    if failures:
+        print("FAILED:", failures, file=sys.stderr)
+        raise SystemExit(1)
 
 
 _SUITE = ("bench_fig2", "bench_fig3_ugw", "bench_fig4_sensitivity",

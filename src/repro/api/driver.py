@@ -1,74 +1,59 @@
 """Shared tolerance-aware outer-loop driver for all GW solvers.
 
-Replaces the fixed-length ``lax.scan`` outer loops: a bounded
-``lax.while_loop`` that stops early once the coupling reaches a relative
-ℓ1 fixed point, while recording the per-iteration marginal-violation
-error into a fixed-size buffer (so the result has static shapes and the
-whole solve stays ``jit``/``vmap``-compatible).
+A bounded ``lax.while_loop`` that stops early once the coupling reaches a
+relative ℓ1 fixed point, while recording the per-iteration
+marginal-violation error into a fixed-size buffer (static shapes, so the
+whole solve stays ``jit``/``vmap``-compatible). Since the health layer
+landed, the implementation lives in ``repro.health.loop.health_loop`` —
+this module keeps the solver-facing name and re-exports the pieces
+solvers consume.
 
 vmap semantics: ``lax.while_loop`` under ``vmap`` keeps stepping every
 lane until *all* lanes are done, so the body freezes finished lanes with
-``where(done, old, new)`` — a lane that converged at iteration k returns
-exactly its iteration-k state no matter how long its batch peers run.
+``where(done, old, new)`` — a lane that converged (or died) at iteration
+k returns exactly its iteration-k state no matter how long its batch
+peers run.
 
-``tol <= 0`` reproduces the legacy fixed-budget behavior exactly: the
-early-stop predicate is compiled out, the loop always runs the full
-``max_iters``, and ``converged`` stays False.
+``tol <= 0`` reproduces the legacy fixed-budget behavior: the early-stop
+predicate is compiled out, the loop runs the full ``max_iters`` (minus
+nothing — rescues share the budget), and ``converged`` stays False.
+
+Health semantics (repro/health/loop.py): every step's output is checked
+for non-finite leaves and mass collapse; unhealthy steps are either
+rescued (restart from the last healthy iterate with escalated
+``scale``, when ``max_rescues > 0`` and ``scaled_step`` steps accept the
+escalation) or end the lane with a DIVERGED status. The returned
+:class:`~repro.health.loop.LoopResult` carries a per-lane
+:class:`~repro.health.status.SolveStatus`.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
-from jax import lax
+from repro.health.loop import LoopResult, health_loop
 
-_TINY = 1e-30
-
-
-def _tree_l1(tree):
-    return jax.tree.reduce(
-        lambda acc, leaf: acc + jnp.sum(jnp.abs(leaf)), tree, jnp.float32(0))
+__all__ = ["pga_loop", "LoopResult", "health_loop"]
 
 
 def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
-             tol: float) -> Tuple:
+             tol: float, **health_kw) -> LoopResult:
     """Iterate ``T <- step_fn(T)`` up to ``max_iters`` times.
 
-    step_fn — one outer PGA/entropic step (Sinkhorn projection included)
+    step_fn — one outer PGA/entropic step (Sinkhorn projection included);
+              with ``scaled_step=True`` it must accept ``(T, scale)``
+              where ``scale`` is the ε-rescue escalation factor
     err_fn  — diagnostic recorded per iteration (marginal ℓ1 violation)
     tol     — stop when sum|T_new - T| / sum|T| <= tol (static float),
               with the sums taken over every leaf when the iterate is a
               pytree (e.g. the (Q, R, g) factor triple of a low-rank
-              coupling) — a single-array iterate reduces to the legacy
-              scalar criterion bitwise
+              coupling)
 
-    Returns ``(T, errors, n_iters, converged)`` with ``errors`` of static
-    shape (max_iters,), NaN-padded past ``n_iters``.
+    Extra keyword arguments (``scaled_step``, ``max_rescues``,
+    ``rescue_factor``, ``mass_floor``, ``stall_err``, ``fault``) are
+    forwarded to :func:`repro.health.loop.health_loop`.
+
+    Returns a ``LoopResult(iterate, errors, n_iters, converged, status)``
+    with ``errors`` of static shape (max_iters,), NaN-padded past
+    ``n_iters`` and at rescued/diverged iterations.
     """
-    errs0 = jnp.full((max_iters,), jnp.nan, jnp.float32)
-    if max_iters <= 0:
-        return T0, errs0, jnp.int32(0), jnp.bool_(False)
-
-    def cond(state):
-        i, _, _, done = state
-        return (i < max_iters) & jnp.logical_not(done)
-
-    def body(state):
-        i, T, errs, done = state
-        T_new = step_fn(T)
-        err = err_fn(T_new).astype(jnp.float32)
-        # freeze lanes that were already done (batched-while masking)
-        errs = jnp.where(done, errs, errs.at[i].set(err))
-        T_out = jax.tree.map(lambda new, old: jnp.where(done, old, new),
-                             T_new, T)
-        i_out = jnp.where(done, i, i + 1)
-        if tol > 0:                    # tol is static: predicate compiled out
-            num = _tree_l1(jax.tree.map(lambda new, old: new - old, T_new, T))
-            delta = num / jnp.maximum(_tree_l1(T), _TINY)
-            done = done | (delta <= tol)
-        return i_out, T_out, errs, done
-
-    state0 = (jnp.int32(0), T0, errs0, jnp.bool_(False))
-    n_iters, T, errors, converged = lax.while_loop(cond, body, state0)
-    return T, errors, n_iters, converged
+    return health_loop(step_fn, err_fn, T0, max_iters, tol, **health_kw)

@@ -8,11 +8,12 @@ tuples. All containers are pytrees: a ``vmap``-batched solve returns one
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax.numpy as jnp
 
 from repro.api.pytree import register_pytree_dataclass
+from repro.health.status import SolveStatus
 
 
 class SparseCoupling(NamedTuple):
@@ -144,12 +145,17 @@ class GWOutput:
     converged — True iff the outer loop hit the tolerance before the bound
                 (always False when the solver ran with ``tol=0``)
     n_iters   — number of outer iterations actually taken
+    status    — per-lane :class:`~repro.health.status.SolveStatus`
+                (CONVERGED / MAXITER / STALLED / DIVERGED, iteration of
+                first failure, last finite error, rescues consumed);
+                ``None`` only for outputs built by pre-health code
     """
     value: Any
     coupling: Any
     errors: Any
     converged: Any
     n_iters: Any
+    status: Optional[SolveStatus] = None
 
     def coupling_dense(self, m: int, n: int):
         """The coupling as a dense (m, n) matrix, whatever its storage."""
@@ -160,4 +166,5 @@ class GWOutput:
 
 register_pytree_dataclass(
     GWOutput,
-    data_fields=("value", "coupling", "errors", "converged", "n_iters"))
+    data_fields=("value", "coupling", "errors", "converged", "n_iters",
+                 "status"))

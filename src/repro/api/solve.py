@@ -20,9 +20,13 @@ from __future__ import annotations
 from typing import Optional, Union
 
 import jax
+import numpy as np
 
 from repro.api.problem import QuadraticProblem
+from repro.api.pytree import is_concrete
 from repro.api.solvers import get_solver
+from repro.health.fallback import fallback_chain
+from repro.health.status import DIVERGED, STALLED, SolveDivergedError
 
 # auto-selection size thresholds (max(m, n)); see select_solver
 AUTO_DENSE_MAX = 256
@@ -87,28 +91,90 @@ def _solve_jit(problem, solver, key):
     return solver.run(problem, key)
 
 
+def _solve_failed(out) -> bool:
+    """Host-side failure predicate: DIVERGED/STALLED status (any lane) or
+    a non-finite value."""
+    if out.status is not None and bool(np.any(
+            np.asarray(out.status.code) >= STALLED)):
+        return True
+    return not bool(np.all(np.isfinite(np.asarray(out.value))))
+
+
 def solve(problem: QuadraticProblem,
           solver: Union[str, object, None] = None,
-          key: Optional[jax.Array] = None, validate: bool = True):
+          key: Optional[jax.Array] = None, validate: bool = True,
+          on_failure: str = "none"):
     """Solve a QuadraticProblem; returns a structured ``GWOutput``.
 
-    solver   — a solver config instance; a registry name ("spar_gw",
-               "dense_gw", "grid_gw", "quantized_gw", "lowrank_gw", ...)
-               which selects
-               that solver's ``default_config`` for the problem size; or
-               None to auto-select from the problem structure
-               (:func:`select_solver`)
-    key      — PRNG key; required by sampling/multiscale solvers, ignored
-               by dense
-    validate — run the problem's boundary checks if they haven't run yet
-               (construction with validate=True already marks the problem
-               validated; value checks are auto-skipped under tracing;
-               pass False for zero overhead)
+    solver     — a solver config instance; a registry name ("spar_gw",
+                 "dense_gw", "grid_gw", "quantized_gw", "lowrank_gw", ...)
+                 which selects
+                 that solver's ``default_config`` for the problem size; or
+                 None to auto-select from the problem structure
+                 (:func:`select_solver`)
+    key        — PRNG key; required by sampling/multiscale solvers, ignored
+                 by dense (checked here, eagerly, so a missing key is a
+                 clear ``ValueError`` instead of a mid-trace failure)
+    validate   — run the problem's boundary checks if they haven't run yet
+                 (construction with validate=True already marks the problem
+                 validated; value checks are auto-skipped under tracing;
+                 pass False for zero overhead)
+    on_failure — what to do when the solve comes back unhealthy (DIVERGED
+                 or STALLED status after the solver's own in-jit ε-rescue
+                 budget, or a non-finite value):
+                 * "none" (default) — return the output as-is; inspect
+                   ``out.status`` yourself
+                 * "raise" — raise :class:`SolveDivergedError` (the failed
+                   output rides on ``.output``)
+                 * "fallback" — walk the solver ladder (lowrank →
+                   quantized → spar → dense, eligibility-gated; see
+                   health/fallback.py), re-keying each attempt with
+                   ``jax.random.fold_in(key, attempt)``; returns the first
+                   healthy result, or the original failed output if every
+                   rung fails.
+                 "raise"/"fallback" need concrete outputs, so they are
+                 unavailable inside ``jit``/``vmap`` (statuses are traced
+                 there — handle failure at the call site instead).
     """
+    if on_failure not in ("none", "raise", "fallback"):
+        raise ValueError(
+            f"on_failure must be 'none', 'raise' or 'fallback', got "
+            f"{on_failure!r}")
     if solver is None:
         solver = select_solver(problem)
     elif isinstance(solver, str):
         solver = get_solver(solver).default_config(max(problem.shape))
+    if key is None and getattr(type(solver), "requires_key", False):
+        raise ValueError(
+            f"{type(solver).__name__} needs a PRNG key (it draws a random "
+            f"support / anchors / init): call repro.solve(problem, solver, "
+            f"key=jax.random.PRNGKey(seed))")
     if validate and not getattr(problem, "_validated", False):
         problem.check()
-    return _solve_jit(problem, solver, key)
+    out = _solve_jit(problem, solver, key)
+    if on_failure == "none":
+        return out
+    if not (is_concrete(out.value)
+            and (out.status is None or is_concrete(out.status.code))):
+        raise ValueError(
+            "on_failure='raise'/'fallback' inspects concrete solve results "
+            "and cannot run under jit/vmap tracing; call solve eagerly or "
+            "use on_failure='none' and handle out.status downstream")
+    if not _solve_failed(out):
+        return out
+    primary_name = getattr(type(solver), "name", type(solver).__name__)
+    if on_failure == "raise":
+        raise SolveDivergedError(
+            f"{primary_name} failed: status="
+            f"{out.status.describe() if out.status is not None else None}, "
+            f"value={np.asarray(out.value)}", output=out)
+    # fallback: deterministic ladder walk — attempt k re-keys with
+    # fold_in(key, k), so recovered solves are bitwise reproducible
+    for attempt, cand in enumerate(
+            fallback_chain(problem, exclude=(primary_name,),
+                           key_available=key is not None), start=1):
+        cand_key = None if key is None else jax.random.fold_in(key, attempt)
+        cand_out = _solve_jit(problem, cand, cand_key)
+        if not _solve_failed(cand_out):
+            return cand_out
+    return out

@@ -69,8 +69,8 @@ def register_solver(name: str):
         # exact type — registration doesn't inherit) is not registered yet
         if jax.tree_util.all_leaves([object.__new__(cls)]):
             fields = tuple(f.name for f in dataclasses.fields(cls))
-            data = tuple(f for f in fields if f == "epsilon")
-            meta = tuple(f for f in fields if f != "epsilon")
+            data = tuple(f for f in fields if f in ("epsilon", "fault"))
+            meta = tuple(f for f in fields if f not in data)
             register_pytree_dataclass(cls, data, meta)
         _REGISTRY[name] = cls
         cls.name = name
@@ -107,15 +107,18 @@ def _dense_marginal_err(T, a, b):
             + jnp.sum(jnp.abs(T.sum(axis=0) - b)))
 
 
-def _spar_pga_step(T, cost_fn, a, b, rows, cols, w, logw, m: int, n: int,
-                   epsilon, inner_iters: int, inner_tol: float, reg: str,
-                   stable: bool, alpha=1.0, lin=0.0):
+def _spar_pga_step(T, scale, cost_fn, a, b, rows, cols, w, logw, m: int,
+                   n: int, epsilon, inner_iters: int, inner_tol: float,
+                   reg: str, stable: bool, alpha=1.0, lin=0.0):
     """One proximal/entropic PGA outer step on the COO support.
 
     Shared by SPAR-GW (α = 1, lin = 0) and SPAR-FGW (lin = M̃): the
     iteration cost is C = α·(L @ T̃) + (1-α)·lin, and in the stable path
     the fused cost_fn writes logK = -C/ε + log w (+ log T̃) directly.
+    ``scale`` is the driver's ε-rescue escalation (1.0 until a rescue
+    fires; each rescue doubles it, flattening the kernel).
     """
+    epsilon = epsilon * scale
     if stable:
         off = logw - ((1.0 - alpha) / epsilon) * lin
         if reg == "prox":
@@ -139,6 +142,12 @@ def _require_key(key, solver_name: str):
             f"repro.solve(problem, solver, key=jax.random.PRNGKey(...))")
 
 
+def _health_kw(solver):
+    """Driver keywords wiring a config's rescue/fault knobs into pga_loop."""
+    return dict(scaled_step=True, max_rescues=solver.max_rescues,
+                rescue_factor=solver.rescue_factor, fault=solver.fault)
+
+
 # ---------------------------------------------------------------------------
 # SPAR-GW (Algorithms 2, 3, 4 — COO importance sparsification)
 # ---------------------------------------------------------------------------
@@ -151,7 +160,10 @@ class SparGWSolver:
     Covers Alg. 2 (GW), Alg. 4 (fused, problem carries a linear term) and
     Alg. 3 (unbalanced, problem carries ``lam``). ``s`` is the sampled
     support size (the paper uses s = 16n); ``cost_impl`` selects the
-    O(s²) cost-assembly backend (kernels/spar_cost).
+    O(s²) cost-assembly backend (kernels/spar_cost). ``max_rescues`` /
+    ``rescue_factor`` bound the driver's in-jit ε-rescue restarts on
+    detected divergence (ε-doubling from the last healthy iterate);
+    ``fault`` is the chaos-testing hook (health/faults.py).
     """
     s: int = 0
     reg: str = "prox"
@@ -164,6 +176,11 @@ class SparGWSolver:
     cost_chunk: int = 1024
     stable: bool = True
     cost_impl: str = "auto"
+    max_rescues: int = 2
+    rescue_factor: float = 2.0
+    fault: Any = None
+
+    requires_key = True
 
     @classmethod
     def default_config(cls, n: int):
@@ -203,8 +220,9 @@ class SparGWSolver:
                        inner_tol=self.inner_tol, reg=self.reg,
                        stable=self.stable, alpha=alpha, lin=lin)
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, errors, n_iters, converged = pga_loop(
-            step, err_fn, T0, self.outer_iters, self.tol)
+        T, errors, n_iters, converged, status = pga_loop(
+            step, err_fn, T0, self.outer_iters, self.tol,
+            **_health_kw(self))
         # Step 8: plug-in objective on the sparse support, O(s²).
         quad = jnp.sum(T * cost_fn(T))
         if fused:
@@ -212,7 +230,8 @@ class SparGWSolver:
         else:
             value = quad
         return GWOutput(value=value, coupling=SparseCoupling(rows, cols, T),
-                        errors=errors, converged=converged, n_iters=n_iters)
+                        errors=errors, converged=converged, n_iters=n_iters,
+                        status=status)
 
     def _run_unbalanced(self, problem, key) -> GWOutput:
         Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
@@ -237,9 +256,9 @@ class SparGWSolver:
         cost_fn = make_spar_cost_fn(Cx, Cy, rows, cols, loss,
                                     impl=self.cost_impl, chunk=self.cost_chunk)
 
-        def step(T):
+        def step(T, scale):
             mT = jnp.sum(T)
-            eps_bar = eps * mT
+            eps_bar = eps * scale * mT      # scale: driver ε-rescue escalation
             lam_bar = lam * mT
             mu = jax.ops.segment_sum(T, rows, num_segments=m)
             nu = jax.ops.segment_sum(T, cols, num_segments=n)
@@ -254,15 +273,17 @@ class SparGWSolver:
             return jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
 
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, errors, n_iters, converged = pga_loop(
-            step, err_fn, T0, self.outer_iters, self.tol)
+        T, errors, n_iters, converged, status = pga_loop(
+            step, err_fn, T0, self.outer_iters, self.tol,
+            **_health_kw(self))
         # Alg. 3 step 11: UGW objective on the sparse coupling
         mu = jax.ops.segment_sum(T, rows, num_segments=m)
         nu = jax.ops.segment_sum(T, cols, num_segments=n)
         value = (jnp.sum(T * cost_fn(T))
                  + lam * quadratic_kl(mu, a) + lam * quadratic_kl(nu, b))
         return GWOutput(value=value, coupling=SparseCoupling(rows, cols, T),
-                        errors=errors, converged=converged, n_iters=n_iters)
+                        errors=errors, converged=converged, n_iters=n_iters,
+                        status=status)
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +305,11 @@ class DenseGWSolver:
     tol: float = 0.0
     inner_tol: float = 0.0
     stable: bool = True
+    max_rescues: int = 2
+    rescue_factor: float = 2.0
+    fault: Any = None
+
+    requires_key = False
 
     @classmethod
     def default_config(cls, n: int):
@@ -307,32 +333,34 @@ class DenseGWSolver:
         M = problem.linear_cost_dense() if fused else None
         T0 = a[:, None] * b[None, :]
 
-        def step(T):
+        def step(T, scale):
+            eps = self.epsilon * scale      # scale: driver ε-rescue escalation
             C = dense_cost(Cx, Cy, T, loss)
             if fused:
                 C = alpha * C + (1 - alpha) * M
             if self.stable:
-                logK = -C / self.epsilon
+                logK = -C / eps
                 if self.reg == "prox":
                     logK = logK + jnp.log(jnp.maximum(T, 1e-38))
                 return sinkhorn_log(a, b, logK, self.inner_iters,
                                     tol=self.inner_tol)
             Cs = C - jnp.min(C)      # constant shift — Sinkhorn-invariant
-            K = jnp.exp(-Cs / self.epsilon)
+            K = jnp.exp(-Cs / eps)
             if self.reg == "prox":
                 K = K * T
             return sinkhorn(a, b, K, self.inner_iters, tol=self.inner_tol)
 
         err_fn = partial(_dense_marginal_err, a=a, b=b)
-        T, errors, n_iters, converged = pga_loop(
-            step, err_fn, T0, self.outer_iters, self.tol)
+        T, errors, n_iters, converged, status = pga_loop(
+            step, err_fn, T0, self.outer_iters, self.tol,
+            **_health_kw(self))
         quad = gw_objective(Cx, Cy, T, loss)
         if fused:
             value = alpha * quad + (1 - alpha) * jnp.sum(M * T)
         else:
             value = quad
         return GWOutput(value=value, coupling=T, errors=errors,
-                        converged=converged, n_iters=n_iters)
+                        converged=converged, n_iters=n_iters, status=status)
 
     def _run_unbalanced(self, problem) -> GWOutput:
         Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
@@ -340,9 +368,9 @@ class DenseGWSolver:
         lam, loss, eps = problem.lam, problem.loss, self.epsilon
         T0 = a[:, None] * b[None, :] / jnp.sqrt(jnp.sum(a) * jnp.sum(b))
 
-        def step(T):
+        def step(T, scale):
             mT = jnp.sum(T)
-            eps_bar = eps * mT
+            eps_bar = eps * scale * mT      # scale: driver ε-rescue escalation
             lam_bar = lam * mT
             C = dense_cost(Cx, Cy, T, loss) + _marginal_penalty(
                 T.sum(1), T.sum(0), a, b, lam)
@@ -353,13 +381,14 @@ class DenseGWSolver:
             return jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
 
         err_fn = partial(_dense_marginal_err, a=a, b=b)
-        T, errors, n_iters, converged = pga_loop(
-            step, err_fn, T0, self.outer_iters, self.tol)
+        T, errors, n_iters, converged, status = pga_loop(
+            step, err_fn, T0, self.outer_iters, self.tol,
+            **_health_kw(self))
         value = (jnp.sum(T * dense_cost(Cx, Cy, T, loss))
                  + lam * quadratic_kl(T.sum(1), a)
                  + lam * quadratic_kl(T.sum(0), b))
         return GWOutput(value=value, coupling=T, errors=errors,
-                        converged=converged, n_iters=n_iters)
+                        converged=converged, n_iters=n_iters, status=status)
 
 
 # ---------------------------------------------------------------------------
@@ -386,6 +415,11 @@ class GridGWSolver:
     shrink: float = 0.0
     use_kernel: bool = False
     stable: bool = True
+    max_rescues: int = 2
+    rescue_factor: float = 2.0
+    fault: Any = None
+
+    requires_key = True
 
     @classmethod
     def default_config(cls, n: int):
@@ -419,25 +453,28 @@ class GridGWSolver:
         bC = bC / bC.sum()
         T0 = aR[:, None] * bC[None, :]
 
-        def step(T):
+        def step(T, scale):
+            eps = self.epsilon * scale      # scale: driver ε-rescue escalation
             Cmat = grid_cost(CxR, CyC, T, loss, self.use_kernel)
             if self.stable:
-                logK = -Cmat / self.epsilon + jnp.log(w)
+                logK = -Cmat / eps + jnp.log(w)
                 if self.reg == "prox":
                     logK = logK + jnp.log(jnp.maximum(T, 1e-38))
                 return sinkhorn_log(aR, bC, logK, self.inner_iters,
                                     tol=self.inner_tol)
             Cs = Cmat - jnp.min(Cmat)
-            K = jnp.exp(-Cs / self.epsilon) * w
+            K = jnp.exp(-Cs / eps) * w
             if self.reg == "prox":
                 K = K * T
             return sinkhorn(aR, bC, K, self.inner_iters, tol=self.inner_tol)
 
         err_fn = partial(_dense_marginal_err, a=aR, b=bC)
-        T, errors, n_iters, converged = pga_loop(
-            step, err_fn, T0, self.outer_iters, self.tol)
+        T, errors, n_iters, converged, status = pga_loop(
+            step, err_fn, T0, self.outer_iters, self.tol,
+            **_health_kw(self))
         value = jnp.sum(T * grid_cost(CxR, CyC, T, loss, self.use_kernel))
         return GWOutput(value=value, coupling=GridCoupling(R, C, T),
-                        errors=errors, converged=converged, n_iters=n_iters)
+                        errors=errors, converged=converged, n_iters=n_iters,
+                        status=status)
 
 

@@ -1,0 +1,45 @@
+"""Numerical health & recovery layer (DESIGN.md §8).
+
+Detection (finite-guards + stall classification in the shared loop
+driver), ε-rescue restarts, the solver fallback ladder behind
+``solve(..., on_failure="fallback")``, and the fault-injection chaos
+harness that makes all of it testable.
+"""
+from repro.health.faults import FaultSpec
+from repro.health.fallback import LADDER, fallback_chain
+from repro.health.loop import (
+    DEFAULT_MASS_CEIL,
+    DEFAULT_MASS_FLOOR,
+    DEFAULT_STALL_ERR,
+    LoopResult,
+    health_loop,
+    tree_finite,
+)
+from repro.health.status import (
+    CONVERGED,
+    DIVERGED,
+    MAXITER,
+    STALLED,
+    STATUS_NAMES,
+    SolveDivergedError,
+    SolveStatus,
+)
+
+__all__ = [
+    "CONVERGED",
+    "MAXITER",
+    "STALLED",
+    "DIVERGED",
+    "STATUS_NAMES",
+    "SolveStatus",
+    "SolveDivergedError",
+    "FaultSpec",
+    "LoopResult",
+    "health_loop",
+    "tree_finite",
+    "DEFAULT_MASS_CEIL",
+    "DEFAULT_MASS_FLOOR",
+    "DEFAULT_STALL_ERR",
+    "fallback_chain",
+    "LADDER",
+]

@@ -1,0 +1,62 @@
+"""Solver fallback ladder — what ``solve(..., on_failure="fallback")`` walks.
+
+When a solve comes back unhealthy (DIVERGED/STALLED status or non-finite
+value) after its own in-jit ε-rescue budget is exhausted, the front door
+retries the problem on the next solver down the ladder
+
+    lowrank_gw -> quantized_gw -> spar_gw -> dense_gw
+
+ordered most-scalable-first and gated by the same structural eligibility
+rules as ``select_solver`` (lowrank needs balanced/non-fused/decomposable
+problems) plus feasibility caps (spar's O((16n)²) assembly and dense's
+O(n³)-per-iteration work stop being answers at large n). Each attempt is
+re-keyed deterministically — ``jax.random.fold_in(key, attempt)`` — so a
+recovered solve is bitwise reproducible run-to-run.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+# most scalable first; grid_gw is excluded (it is a sparsification
+# *variant*, not a robustness rung — same failure surface as spar_gw)
+LADDER = ("lowrank_gw", "quantized_gw", "spar_gw", "dense_gw")
+
+# feasibility caps on max(m, n) for the quadratic/cubic rungs: 4× the
+# auto-selection thresholds — a fallback may pay more than the router
+# would choose, but not an infeasible amount
+FALLBACK_SPAR_MAX = 8192
+FALLBACK_DENSE_MAX = 1024
+
+
+def fallback_chain(problem, exclude: Sequence[str] = (),
+                   key_available: bool = True):
+    """Ordered list of solver configs eligible to retry ``problem``.
+
+    exclude       — registry names already tried (the primary solver and
+                    any spent fallback attempts)
+    key_available — False drops solvers that require a PRNG key (the
+                    ladder then typically reduces to dense_gw)
+    """
+    # late imports: api.solve imports this module at call time
+    from repro.api.solve import _lowrank_eligible
+    from repro.api.solvers import get_solver
+
+    size = max(problem.shape)
+    fused_unbalanced = problem.is_fused and problem.is_unbalanced
+    chain = []
+    for name in LADDER:
+        if name in exclude:
+            continue
+        if name == "lowrank_gw" and not _lowrank_eligible(problem):
+            continue
+        if name == "spar_gw" and (size > FALLBACK_SPAR_MAX
+                                  or fused_unbalanced):
+            continue
+        if name == "dense_gw" and (size > FALLBACK_DENSE_MAX
+                                   or fused_unbalanced):
+            continue
+        cls = get_solver(name)
+        if not key_available and getattr(cls, "requires_key", False):
+            continue
+        chain.append(cls.default_config(size))
+    return chain

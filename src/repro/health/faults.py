@@ -1,0 +1,94 @@
+"""Fault injection — a chaos harness for the numerical-health machinery.
+
+Detection and recovery paths that only fire on real divergence are
+untestable on healthy problems, so every solver config carries an
+optional ``fault`` field (a :class:`FaultSpec`) that the shared loop
+driver applies at configured iterations:
+
+    solver = DenseGWSolver(fault=FaultSpec(at_iter=3, kind="nan"))
+    out = repro.solve(problem, solver)      # diverges at iteration 3
+    assert out.status.describe() == "DIVERGED" or out.status.n_rescues > 0
+
+``at_iter`` is a *dynamic* pytree leaf: under ``vmap`` it can be a
+per-lane value, so a stacked solve can poison exactly one lane
+(``at_iter=-1`` disarms a lane) — the per-lane-independence acceptance
+test. ``kind``/``site``/``persistent`` are static metadata (they select
+code, not data).
+
+For the multiscale solver, ``QuantizedGWSolver.fault`` targets the
+polish loop; to poison the coarse solve, set the fault on the nested
+``base`` solver config instead (faults compose exactly like solvers do).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.pytree import register_pytree_dataclass
+
+_KINDS = ("nan", "inf", "overflow", "zero")
+_SITES = ("iterate", "cost")
+
+# finite but huge: squares/products overflow fp32 downstream, so the
+# fault is *not* caught at the injection step — it exercises the
+# detection of divergence that develops over following iterations
+_OVERFLOW_SCALE = 1e30
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Inject a numerical fault into the outer loop at chosen iterations.
+
+    at_iter    — iteration index to fire at (0-based; dynamic leaf, may be
+                 a per-lane scalar under vmap; negative = never fire)
+    kind       — "nan" / "inf": poison every entry of the iterate;
+                 "overflow": scale by 1e30 (finite now, overflows later);
+                 "zero": wipe the iterate (mass-collapse path)
+    site       — "iterate": applied to the step's *output* (a poisoned
+                 update); "cost": applied to the step's *input*, so the
+                 fault flows through the cost evaluation / inner Sinkhorn
+    persistent — fire at every iteration >= at_iter instead of once
+                 (a once-off fault is rescuable by restarting; a
+                 persistent one exhausts rescue and must end DIVERGED)
+    """
+    at_iter: Any = -1
+    kind: str = "nan"
+    site: str = "iterate"
+    persistent: bool = False
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got "
+                             f"{self.kind!r}")
+        if self.site not in _SITES:
+            raise ValueError(f"site must be one of {_SITES}, got "
+                             f"{self.site!r}")
+
+    def fires(self, i):
+        at = jnp.asarray(self.at_iter)
+        hit = (i >= at) if self.persistent else (i == at)
+        return hit & (at >= 0)
+
+    def apply(self, tree, i):
+        """Poison every leaf of ``tree`` when the fault fires at ``i``."""
+        hit = self.fires(i)
+
+        def poison(x):
+            if self.kind == "nan":
+                bad = jnp.full_like(x, jnp.nan)
+            elif self.kind == "inf":
+                bad = jnp.full_like(x, jnp.inf)
+            elif self.kind == "zero":
+                bad = jnp.zeros_like(x)
+            else:  # overflow
+                bad = x * jnp.asarray(_OVERFLOW_SCALE, x.dtype)
+            return jnp.where(hit, bad, x)
+
+        return jax.tree.map(poison, tree)
+
+
+register_pytree_dataclass(FaultSpec, data_fields=("at_iter",),
+                          meta_fields=("kind", "site", "persistent"))

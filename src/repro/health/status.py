@@ -1,0 +1,100 @@
+"""Solve-status lattice — the machine-readable health verdict of a solve.
+
+Four codes, ordered by severity (higher = worse), chosen so that lattice
+joins are ``jnp.maximum``:
+
+    CONVERGED (0) — outer tolerance met, marginal error healthy
+    MAXITER   (1) — iteration budget exhausted before the tolerance
+    STALLED   (2) — the iterate reached a fixed point (tolerance met) but
+                    the marginal violation stayed large: a non-coupling
+                    fixed point (the dense-PGA mixing stalls of PR 4)
+    DIVERGED  (3) — a non-finite or mass-collapsed iterate appeared and
+                    rescue (if enabled) was exhausted; the returned state
+                    is the last *healthy* iterate, never the poisoned one
+
+``SolveStatus`` is a NamedTuple of arrays, so it is a pytree: a
+``vmap``-batched solve returns one status whose leaves carry the batch
+dimension, and per-lane verdicts stay independent (one poisoned lane in a
+stack reports DIVERGED while its peers report their own codes).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+CONVERGED = 0
+MAXITER = 1
+STALLED = 2
+DIVERGED = 3
+
+STATUS_NAMES = ("CONVERGED", "MAXITER", "STALLED", "DIVERGED")
+
+
+class SolveStatus(NamedTuple):
+    """Per-solve (per-lane under vmap) numerical-health verdict.
+
+    code      — int32 lattice code (see module constants)
+    fail_iter — iteration index of the *first* unhealthy step (non-finite
+                or mass-collapsed), whether or not it was later rescued;
+                -1 if the solve never went unhealthy
+    last_err  — last finite recorded diagnostic (marginal ℓ1 violation);
+                NaN if no iteration completed healthily
+    n_rescues — ε-rescue restarts consumed (0 = none needed)
+    """
+    code: Any
+    fail_iter: Any
+    last_err: Any
+    n_rescues: Any
+
+    @property
+    def is_converged(self):
+        return self.code == CONVERGED
+
+    @property
+    def is_stalled(self):
+        return self.code == STALLED
+
+    @property
+    def is_diverged(self):
+        return self.code == DIVERGED
+
+    @property
+    def is_healthy(self):
+        """CONVERGED or MAXITER — the solve produced a usable iterate."""
+        return self.code <= MAXITER
+
+    @classmethod
+    def healthy(cls, code):
+        """An all-clear status with the given code (no failure recorded)."""
+        return cls(code=jnp.int32(code), fail_iter=jnp.int32(-1),
+                   last_err=jnp.float32(jnp.nan), n_rescues=jnp.int32(0))
+
+    def join(self, other: "SolveStatus") -> "SolveStatus":
+        """Lattice join of two stage statuses (e.g. coarse solve + polish):
+        the worse code wins and carries its failure provenance."""
+        worse = other.code > self.code
+        pick = lambda x, y: jnp.where(worse, y, x)  # noqa: E731
+        return SolveStatus(jnp.maximum(self.code, other.code),
+                           pick(self.fail_iter, other.fail_iter),
+                           pick(self.last_err, other.last_err),
+                           self.n_rescues + other.n_rescues)
+
+    def describe(self):
+        """Human-readable code name(s) — host-side helper, not jittable.
+        Returns a str for a scalar status, a list of str for a batch."""
+        import numpy as np
+        code = np.asarray(self.code)
+        if code.ndim == 0:
+            return STATUS_NAMES[int(code)]
+        return [STATUS_NAMES[int(c)] for c in code.reshape(-1)]
+
+
+class SolveDivergedError(RuntimeError):
+    """Raised by ``solve(..., on_failure="raise")`` when the solve failed
+    (DIVERGED/STALLED status or non-finite value) and, under
+    ``on_failure="fallback"``, when every ladder candidate failed too."""
+
+    def __init__(self, message: str, output=None):
+        super().__init__(message)
+        self.output = output

@@ -25,6 +25,13 @@ from repro.core.sinkhorn import _scaling_loop
 from repro.core.utils import safe_div
 
 
+def _or(x, fallback):
+    """x where finite, else fallback — extreme kernels (e^{±1/ε} at tiny
+    ε) drive 0·inf / inf/inf products non-finite; dropping that update is
+    the KL-safe fallback and the layer's never-silent-NaN contract."""
+    return jnp.where(jnp.isfinite(x), x, fallback)
+
+
 def lr_dykstra(K1, K2, k3, a, b, alpha: float, iters: int, tol: float):
     """Project kernels (K1 ∈ ℝ^{m×r}, K2 ∈ ℝ^{n×r}, k3 ∈ ℝ^r) onto
     C(a, b, r). Returns the feasible factors ``(Q, R, g)``.
@@ -46,22 +53,23 @@ def lr_dykstra(K1, K2, k3, a, b, alpha: float, iters: int, tol: float):
         u1 = safe_div(a, K1 @ v1)
         u2 = safe_div(b, K2 @ v2)
         # g ≥ α projection (with its Dykstra correction)
-        g_mid = jnp.maximum(alpha, g * q3_1)
-        q3_1 = safe_div(g * q3_1, g_mid)
+        g_mid = jnp.maximum(alpha, _or(g * q3_1, g))
+        q3_1 = _or(safe_div(g * q3_1, g_mid), 1.0)
         # shared inner marginal: Qᵀ1 = Rᵀ1 = g, geometric-mean coupling
         kt1u = K1.T @ u1
         kt2u = K2.T @ u2
         prod1 = (v1 * q1) * kt1u
         prod2 = (v2 * q2) * kt2u
-        g_new = (g_mid * q3_2 * prod1 * prod2) ** (1.0 / 3.0)
+        g_raw = (g_mid * q3_2 * prod1 * prod2) ** (1.0 / 3.0)
+        g_new = jnp.where(jnp.isfinite(g_raw) & (g_raw > 0), g_raw, g_mid)
         v1_new = safe_div(g_new, kt1u)
         v2_new = safe_div(g_new, kt2u)
-        q1 = safe_div(v1 * q1, v1_new)
-        q2 = safe_div(v2 * q2, v2_new)
-        q3_2 = safe_div(g_mid * q3_2, g_new)
+        q1 = _or(safe_div(v1 * q1, v1_new), 1.0)
+        q2 = _or(safe_div(v2 * q2, v2_new), 1.0)
+        q3_2 = _or(safe_div(g_mid * q3_2, g_new), 1.0)
         return (u1, u2, v1_new, v2_new, g_new, q1, q2, q3_1, q3_2)
 
     u1, u2, v1, v2, g, *_ = _scaling_loop(body, init, iters, tol)
-    Q = u1[:, None] * K1 * v1[None, :]
-    R = u2[:, None] * K2 * v2[None, :]
+    Q = _or(u1[:, None] * K1 * v1[None, :], 0.0)
+    R = _or(u2[:, None] * K2 * v2[None, :], 0.0)
     return Q, R, g

@@ -91,6 +91,12 @@ class LowRankGWSolver:
     inner_iters   — Dykstra budget per mirror step
     tol           — outer stop: relative ℓ1 change of (Q, R, g)
     inner_tol     — Dykstra stop: sup-norm change of the scalings
+    max_rescues, rescue_factor — driver ε-rescue budget on detected
+                    divergence; for mirror descent the escalation
+                    *divides γ* (step-size halving) rather than scaling
+                    ε — an overflowing MD kernel is tamed by a smaller
+                    step, and ε may legitimately be 0 here
+    fault         — chaos-testing hook (health/faults.py)
     """
     rank: int = 0
     cost_rank: int = 0
@@ -102,6 +108,11 @@ class LowRankGWSolver:
     inner_iters: int = 200
     tol: float = 1e-6
     inner_tol: float = 3e-6
+    max_rescues: int = 2
+    rescue_factor: float = 2.0
+    fault: Any = None
+
+    requires_key = True
 
     @classmethod
     def default_config(cls, n: int):
@@ -140,15 +151,22 @@ class LowRankGWSolver:
             mu = Q @ (R.sum(axis=0) / g)
             nu = R @ (Q.sum(axis=0) / g)
             return jnp.sum(jnp.abs(mu - a)) + jnp.sum(jnp.abs(nu - b))
-        (Q, R, g), errors, n_iters, converged = pga_loop(
-            step, err_fn, state0, self.outer_iters, self.tol)
+        (Q, R, g), errors, n_iters, converged, status = pga_loop(
+            step, err_fn, state0, self.outer_iters, self.tol,
+            scaled_step=True, max_rescues=self.max_rescues,
+            rescue_factor=self.rescue_factor, fault=self.fault)
 
         value = gw_lr_value(Q, R, g, fx, fy)
         return GWOutput(value=value, coupling=LowRankCoupling(Q, R, g),
-                        errors=errors, converged=converged, n_iters=n_iters)
+                        errors=errors, converged=converged, n_iters=n_iters,
+                        status=status)
 
-    def _md_step(self, state, a, b, hx, hy):
-        """One mirror-descent + Dykstra-projection step on (Q, R, g)."""
+    def _md_step(self, state, scale, a, b, hx, hy):
+        """One mirror-descent + Dykstra-projection step on (Q, R, g).
+
+        ``scale`` is the driver's rescue escalation: it shrinks the
+        mirror step (γ / scale), the MD analogue of ε-doubling.
+        """
         Q, R, g = state
         grads = gw_lr_gradients(Q, R, g, hx, hy)
         # Project out gradient components the constraint set absorbs: a
@@ -160,7 +178,7 @@ class LowRankGWSolver:
         gq = grads.grad_q - grads.grad_q.mean(axis=1, keepdims=True)
         gr = grads.grad_r - grads.grad_r.mean(axis=1, keepdims=True)
         gg = grads.grad_g - grads.grad_g.mean()
-        gamma = self.gamma
+        gamma = self.gamma / scale
         if self.gamma_rescale:
             sup = jnp.maximum(jnp.max(jnp.abs(gq)),
                               jnp.maximum(jnp.max(jnp.abs(gr)),
@@ -186,7 +204,8 @@ class LowRankGWSolver:
 # here γ is dynamic too)
 register_pytree_dataclass(
     LowRankGWSolver,
-    data_fields=("epsilon", "gamma"),
+    data_fields=("epsilon", "gamma", "fault"),
     meta_fields=("rank", "cost_rank", "gamma_rescale", "g_floor",
-                 "outer_iters", "inner_iters", "tol", "inner_tol"))
+                 "outer_iters", "inner_iters", "tol", "inner_tol",
+                 "max_rescues", "rescue_factor"))
 register_solver("lowrank_gw")(LowRankGWSolver)

@@ -41,6 +41,8 @@ from repro.api.solvers import (
     register_solver,
 )
 from repro.core.gw import gw_objective
+from repro.health.loop import tree_finite
+from repro.health.status import CONVERGED, DIVERGED, MAXITER, SolveStatus
 from repro.kernels.spar_cost.ops import make_spar_cost_fn
 from repro.multiscale.anchors import select_anchors
 from repro.multiscale.compress import coarse_value_correction, compress_problem
@@ -126,6 +128,12 @@ class QuantizedGWSolver:
                     fine objective of the block-constant expansion for
                     the square loss. Balanced decomposable problems only
                     (no-op otherwise). Two O(m²) matvecs when it fires.
+    max_rescues, rescue_factor — ε-rescue budget of the *polish* loop
+                    (the coarse solve inherits the nested base solver's
+                    own rescue config)
+    fault         — chaos-testing hook targeting the polish loop; to
+                    poison the coarse solve, set ``fault`` on the nested
+                    ``base`` config instead (health/faults.py)
     """
     k_x: int = 0
     k_y: int = 0
@@ -142,6 +150,11 @@ class QuantizedGWSolver:
     polish_inner_iters: int = 500
     value_mode: str = "auto"
     debias: bool = True
+    max_rescues: int = 2
+    rescue_factor: float = 2.0
+    fault: Any = None
+
+    requires_key = True
 
     def __post_init__(self):
         if isinstance(self.base, str):
@@ -219,14 +232,41 @@ class QuantizedGWSolver:
         piters = self._polish_budget(pairs * cap_x * cap_y,
                                      not problem.is_unbalanced)
         if piters > 0:
-            coupling, value = self._polish(problem, coupling, piters)
+            coupling, value, polish_status = self._polish(problem, coupling,
+                                                          piters)
             if self.value_mode == "coarse":
                 value = self._coarse_value(problem, coarse_problem, coarse)
         else:
+            polish_status = None
             value = self._value(problem, coarse_problem, coarse, coupling,
                                 m, n)
+        status = self._combined_status(coarse, polish_status, value, coupling)
         return GWOutput(value=value, coupling=coupling, errors=coarse.errors,
-                        converged=coarse.converged, n_iters=coarse.n_iters)
+                        converged=coarse.converged, n_iters=coarse.n_iters,
+                        status=status)
+
+    def _combined_status(self, coarse, polish_status, value, coupling):
+        """Join the stage verdicts: the coarse solve's status is the
+        baseline; the polish (a fixed-budget refinement, so its MAXITER
+        is by design) only contributes divergence; a final finite-guard
+        on the output catches anything the uninstrumented refinement
+        stage produced."""
+        status = coarse.status
+        if status is None:      # third-party base without health plumbing
+            status = SolveStatus(
+                code=jnp.where(coarse.converged, CONVERGED,
+                               MAXITER).astype(jnp.int32),
+                fail_iter=jnp.int32(-1), last_err=jnp.float32(jnp.nan),
+                n_rescues=jnp.int32(0))
+        if polish_status is not None:
+            status = status.join(polish_status._replace(
+                code=jnp.where(polish_status.is_diverged, DIVERGED,
+                               CONVERGED).astype(jnp.int32)))
+        ok = tree_finite((value, coupling))
+        return status.join(SolveStatus(
+            code=jnp.where(ok, CONVERGED, DIVERGED).astype(jnp.int32),
+            fail_iter=jnp.int32(-1), last_err=jnp.float32(jnp.nan),
+            n_rescues=jnp.int32(0)))
 
     # -- polish: exact-support-cost proximal PGA (SPAR-GW machinery) --------
 
@@ -253,7 +293,10 @@ class QuantizedGWSolver:
                        inner_tol=self.refine_tol, reg="prox", stable=True,
                        alpha=alpha, lin=lin)
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, _, _, _ = pga_loop(step, err_fn, T0, piters, 0.0)
+        T, _, _, _, status = pga_loop(
+            step, err_fn, T0, piters, 0.0, scaled_step=True,
+            max_rescues=self.max_rescues, rescue_factor=self.rescue_factor,
+            fault=self.fault)
         T = jnp.where(in_support, T, 0.0)
         quad = jnp.sum(T * cost_fn(T))        # exact ⟨L⊗T, T⟩ on the support
         if fused:
@@ -261,7 +304,7 @@ class QuantizedGWSolver:
         else:
             value = quad
         blocks = T.reshape(coupling.blocks.shape)
-        return coupling._replace(blocks=blocks), value
+        return coupling._replace(blocks=blocks), value, status
 
     # -- value without polish ----------------------------------------------
 
@@ -314,9 +357,9 @@ class QuantizedGWSolver:
 
 register_pytree_dataclass(
     QuantizedGWSolver,
-    data_fields=("epsilon", "base"),
+    data_fields=("epsilon", "base", "fault"),
     meta_fields=("k_x", "k_y", "max_members", "max_pairs", "anchor_method",
                  "anchor_iters", "compress_metric", "refine_iters",
                  "refine_tol", "polish_iters", "polish_inner_iters",
-                 "value_mode", "debias"))
+                 "value_mode", "debias", "max_rescues", "rescue_factor"))
 register_solver("quantized_gw")(QuantizedGWSolver)

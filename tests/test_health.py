@@ -1,0 +1,531 @@
+"""Numerical health & recovery layer: status detection, ε-rescue,
+fault injection, fallback chain, and tiny-ε overflow paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import (
+    DenseGWSolver,
+    Geometry,
+    GridGWSolver,
+    LowRankGWSolver,
+    QuadraticProblem,
+    QuantizedGWSolver,
+    SparGWSolver,
+    solve,
+)
+from repro.health import (
+    CONVERGED,
+    DIVERGED,
+    MAXITER,
+    STALLED,
+    FaultSpec,
+    SolveDivergedError,
+    SolveStatus,
+    fallback_chain,
+    health_loop,
+)
+from repro.lowrank.dykstra import lr_dykstra
+
+KEY = jax.random.PRNGKey(0)
+N = 24
+
+
+def _cloud(key, n, d=2, scale=1.0):
+    x = jax.random.normal(key, (n, d)) * scale
+    return jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+
+
+def _problem(seed=0, n=N, loss="l2", concentrated=False, **kw):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    Cx = _cloud(kx, n)
+    Cy = _cloud(ky, n, scale=1.2)
+    if concentrated:
+        a = jnp.full((n,), 1e-4)
+        a = a.at[0].set(1.0 - (n - 1) * 1e-4)
+    else:
+        a = jnp.ones(n) / n
+    return QuadraticProblem(Geometry(Cx, a), Geometry(Cy, a), loss=loss, **kw)
+
+
+def _faulted(solver, **fault_kw):
+    return dataclasses.replace(solver, max_rescues=0,
+                               fault=FaultSpec(**fault_kw))
+
+
+def _trees_equal(t1, t2):
+    """Bitwise tree equality, treating the NaN padding of ``errors``
+    (identical NaN patterns) as equal."""
+    def eq(x, y):
+        x, y = jnp.asarray(x), jnp.asarray(y)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.array_equal(x, y, equal_nan=True)
+        return jnp.array_equal(x, y)
+    return bool(jax.tree.all(jax.tree.map(eq, t1, t2)))
+
+
+# every registered solver family, configured small and fast
+def _fast_configs(n=N):
+    return {
+        "dense_gw": DenseGWSolver(tol=1e-6, inner_tol=1e-8, outer_iters=10),
+        "spar_gw": SparGWSolver(s=8 * n, outer_iters=10, inner_tol=1e-8),
+        "grid_gw": GridGWSolver(s_r=12, s_c=12, outer_iters=10,
+                                inner_tol=1e-8),
+        "lowrank_gw": LowRankGWSolver(outer_iters=30),
+        "quantized_gw": QuantizedGWSolver(refine_iters=50, polish_iters=2,
+                                          polish_inner_iters=50),
+    }
+
+
+# ---------------------------------------------------------------------------
+# health_loop unit behavior
+# ---------------------------------------------------------------------------
+
+def test_healthy_loop_reports_converged():
+    step = lambda T: 0.5 * T + 0.5          # noqa: E731 — contraction to 1
+    err = lambda T: jnp.sum(jnp.abs(T - 1))  # noqa: E731
+    T, errs, n_iters, conv, status = health_loop(
+        step, err, jnp.zeros(4), 100, 1e-6)
+    assert bool(conv)
+    assert status.describe() == "CONVERGED"
+    assert int(status.fail_iter) == -1
+    assert int(status.n_rescues) == 0
+
+
+def test_maxiter_status():
+    step = lambda T: T + 1.0                 # noqa: E731 — never settles
+    err = lambda T: jnp.float32(0.0)         # noqa: E731
+    *_, conv, status = health_loop(step, err, jnp.zeros(2), 5, 1e-9)
+    assert not bool(conv)
+    assert status.describe() == "MAXITER"
+
+
+def test_stall_classification():
+    """Tolerance met but the diagnostic stays large -> STALLED, not
+    CONVERGED (the dense-PGA mixing-fixed-point failure mode)."""
+    step = lambda T: T                       # noqa: E731 — instant fixed point
+    err = lambda T: jnp.float32(0.9)         # noqa: E731 — huge violation
+    *_, conv, status = health_loop(step, err, jnp.ones(3), 10, 1e-6)
+    assert bool(conv)                        # converged flag: tol was met...
+    assert status.describe() == "STALLED"    # ...but the lattice knows better
+
+
+def test_nan_detected_at_correct_iteration():
+    def step(T):
+        return jnp.where(T[0] >= 3, jnp.nan, T + 1)
+    err = lambda T: jnp.float32(0.0)         # noqa: E731
+    T, errs, n_iters, conv, status = health_loop(
+        step, err, jnp.zeros(2), 20, 0.0)
+    assert status.describe() == "DIVERGED"
+    assert int(status.fail_iter) == 3        # step from T[0]=3 poisons
+    np.testing.assert_array_equal(np.asarray(T), 3.0)   # last healthy kept
+    assert np.all(np.isfinite(np.asarray(T)))
+
+
+def test_mass_explosion_is_divergence():
+    """A finite but absurdly scaled iterate (overflow in progress that
+    log-domain inner solves keep renormalizing around) is fatal too."""
+    def step(T):
+        return jnp.where(T[0] >= 2, 1e25, T + 1)
+    err = lambda T: jnp.float32(0.0)         # noqa: E731
+    *_, status = health_loop(step, err, jnp.zeros(2), 20, 0.0)
+    assert status.describe() == "DIVERGED"
+    assert int(status.fail_iter) == 2
+
+
+def test_mass_collapse_is_divergence():
+    """An all-zero iterate (underflowed kernel) is fatal even though it is
+    finite — the silent tiny-ε failure mode."""
+    def step(T):
+        return jnp.where(T[0] >= 2, 0.0, T + 1)
+    err = lambda T: jnp.float32(0.0)         # noqa: E731
+    *_, status = health_loop(step, err, jnp.zeros(2) + 0.5, 20, 0.0)
+    assert status.describe() == "DIVERGED"
+
+
+def test_rescue_restarts_with_escalated_scale():
+    """A step that overflows at scale 1 but behaves at scale >= 2 must be
+    rescued: restart from the last healthy iterate, escalated scale."""
+    def step(T, scale):
+        return jnp.where(scale < 2.0, jnp.inf, T + 1.0)
+    err = lambda T: jnp.float32(0.0)         # noqa: E731
+    T, errs, n_iters, conv, status = health_loop(
+        step, err, jnp.zeros(2), 10, 0.0, scaled_step=True, max_rescues=2)
+    assert status.describe() == "MAXITER"    # healthy after rescue
+    assert int(status.n_rescues) == 1
+    assert int(status.fail_iter) == 0        # the hiccup is still recorded
+    # 10 budget iterations, 1 consumed by the rescue -> 9 real steps
+    np.testing.assert_allclose(np.asarray(T), 9.0)
+
+
+def test_rescue_exhaustion_diverges():
+    step = lambda T, scale: jnp.full_like(T, jnp.nan)    # noqa: E731
+    err = lambda T: jnp.float32(0.0)                     # noqa: E731
+    *_, status = health_loop(step, err, jnp.ones(2), 10, 0.0,
+                             scaled_step=True, max_rescues=2)
+    assert status.describe() == "DIVERGED"
+    assert int(status.n_rescues) == 2
+    assert int(status.fail_iter) == 0
+
+
+def test_zero_budget_loop():
+    T, errs, n_iters, conv, status = health_loop(
+        lambda T: T, lambda T: jnp.float32(0), jnp.ones(2), 0, 1e-6)
+    assert int(n_iters) == 0 and not bool(conv)
+    assert status.describe() == "MAXITER"
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="bogus")
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(site="bogus")
+
+
+def test_fault_spec_fires_only_at_configured_iteration():
+    f = FaultSpec(at_iter=3, kind="nan")
+    x = jnp.ones(4)
+    assert np.all(np.isfinite(np.asarray(f.apply(x, jnp.int32(2)))))
+    assert np.all(np.isnan(np.asarray(f.apply(x, jnp.int32(3)))))
+    assert np.all(np.isfinite(np.asarray(f.apply(x, jnp.int32(4)))))
+    fp = FaultSpec(at_iter=3, kind="inf", persistent=True)
+    assert np.all(np.isinf(np.asarray(fp.apply(x, jnp.int32(7)))))
+    disarmed = FaultSpec(at_iter=-1, kind="nan")
+    assert np.all(np.isfinite(np.asarray(disarmed.apply(x, jnp.int32(0)))))
+
+
+def test_fault_at_iter_is_dynamic_leaf():
+    t1 = jax.tree_util.tree_flatten(FaultSpec(at_iter=1, kind="nan"))[1]
+    t2 = jax.tree_util.tree_flatten(FaultSpec(at_iter=9, kind="nan"))[1]
+    assert t1 == t2                          # re-aiming never retraces
+    t3 = jax.tree_util.tree_flatten(FaultSpec(at_iter=1, kind="inf"))[1]
+    assert t1 != t3                          # kind selects code: static
+
+
+# ---------------------------------------------------------------------------
+# per-solver detection (the injected-fault matrix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["dense_gw", "spar_gw", "grid_gw",
+                                  "lowrank_gw"])
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+@pytest.mark.parametrize("site", ["iterate", "cost"])
+def test_solver_reports_diverged_at_fault_iteration(name, kind, site):
+    solver = _faulted(_fast_configs()[name], at_iter=2, kind=kind, site=site,
+                      persistent=True)
+    out = solve(_problem(), solver, key=KEY)
+    assert out.status.describe() == "DIVERGED"
+    assert int(out.status.fail_iter) == 2
+    # the returned coupling is the last healthy iterate, never the poison
+    dense = out.coupling_dense(N, N)
+    assert np.all(np.isfinite(np.asarray(dense)))
+    assert np.all(np.isfinite(np.asarray(out.errors[:2])))
+
+
+def test_quantized_inherits_base_divergence():
+    base = _faulted(DenseGWSolver(tol=1e-6, inner_tol=1e-8), at_iter=2,
+                    kind="nan", persistent=True)
+    out = solve(_problem(), QuantizedGWSolver(base=base), key=KEY)
+    assert out.status.describe() == "DIVERGED"
+    assert int(out.status.fail_iter) == 2
+
+
+def test_quantized_polish_divergence_escalates():
+    solver = _faulted(QuantizedGWSolver(polish_iters=3), at_iter=1,
+                      kind="nan", persistent=True)
+    out = solve(_problem(), solver, key=KEY)
+    assert out.status.describe() == "DIVERGED"
+
+
+def test_solver_rescue_recovers_transient_fault():
+    """A once-off fault is absorbed by one ε-rescue restart: the solve
+    finishes healthy, records the rescue, and stays finite."""
+    solver = dataclasses.replace(
+        DenseGWSolver(tol=1e-6, inner_tol=1e-8, outer_iters=10),
+        max_rescues=2, fault=FaultSpec(at_iter=3, kind="nan"))
+    out = solve(_problem(), solver, key=KEY)
+    assert out.status.describe() in ("CONVERGED", "MAXITER")
+    assert int(out.status.n_rescues) == 1
+    assert int(out.status.fail_iter) == 3    # provenance survives recovery
+    assert np.all(np.isfinite(np.asarray(out.coupling)))
+
+
+def test_rescue_is_bitwise_deterministic():
+    """Rescue draws no new randomness: two recovered solves are equal."""
+    solver = dataclasses.replace(
+        SparGWSolver(s=8 * N, outer_iters=8, inner_tol=1e-8),
+        max_rescues=2, fault=FaultSpec(at_iter=2, kind="inf"))
+    o1 = solve(_problem(), solver, key=KEY)
+    o2 = solve(_problem(), solver, key=KEY)
+    assert int(o1.status.n_rescues) == 1
+    assert _trees_equal(o1, o2)
+
+
+# ---------------------------------------------------------------------------
+# vmap per-lane independence
+# ---------------------------------------------------------------------------
+
+def test_vmap_poisoned_lane_does_not_corrupt_peers():
+    """One poisoned lane in a stacked solve: peers must return bitwise
+    exactly their solo results; the poisoned lane alone reports DIVERGED."""
+    probs = [_problem(seed=s) for s in range(4)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *probs)
+    at = jnp.array([-1, 2, -1, -1], jnp.int32)   # poison lane 1 only
+    base = DenseGWSolver(tol=1e-6, inner_tol=1e-8, outer_iters=10)
+
+    def run_one(p, at_iter):
+        s = dataclasses.replace(base, max_rescues=0,
+                                fault=FaultSpec(at_iter=at_iter, kind="nan"))
+        return s.run(p, None)
+
+    outs = jax.jit(jax.vmap(run_one))(stacked, at)
+    assert outs.status.describe() == ["MAXITER", "DIVERGED", "MAXITER",
+                                      "MAXITER"]
+    np.testing.assert_array_equal(np.asarray(outs.status.fail_iter),
+                                  [-1, 2, -1, -1])
+    clean = dataclasses.replace(base, max_rescues=0,
+                                fault=FaultSpec(at_iter=-1, kind="nan"))
+    for lane in (0, 2, 3):
+        solo = solve(probs[lane], clean)
+        np.testing.assert_array_equal(np.asarray(outs.coupling)[lane],
+                                      np.asarray(solo.coupling))
+    assert np.all(np.isfinite(np.asarray(outs.coupling)[1]))
+
+
+# ---------------------------------------------------------------------------
+# solve() front door: key validation, on_failure modes, fallback chain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["spar_gw", "grid_gw", "quantized_gw",
+                                  "lowrank_gw"])
+def test_solve_requires_key_eagerly(name):
+    with pytest.raises(ValueError, match="PRNG key"):
+        solve(_problem(), _fast_configs()[name], key=None)
+
+
+def test_solve_dense_needs_no_key():
+    out = solve(_problem(), DenseGWSolver(outer_iters=3, inner_iters=10))
+    assert np.isfinite(float(out.value))
+
+
+def test_on_failure_raise():
+    solver = _faulted(DenseGWSolver(outer_iters=5), at_iter=1, kind="nan",
+                      persistent=True)
+    with pytest.raises(SolveDivergedError, match="DIVERGED") as exc_info:
+        solve(_problem(), solver, on_failure="raise")
+    assert exc_info.value.output.status.describe() == "DIVERGED"
+
+
+def test_on_failure_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="on_failure"):
+        solve(_problem(), DenseGWSolver(), on_failure="explode")
+
+
+def test_fallback_returns_finite_feasible_coupling():
+    solver = _faulted(SparGWSolver(s=8 * N, outer_iters=8), at_iter=1,
+                      kind="nan", persistent=True)
+    out = solve(_problem(), solver, key=KEY, on_failure="fallback")
+    assert out.status.describe() != "DIVERGED"
+    dense = out.coupling_dense(N, N)
+    assert np.all(np.isfinite(np.asarray(dense)))
+    # feasibility: the recovered coupling's marginals approximate (a, b)
+    a = np.asarray(_problem().geom_x.weights)
+    assert np.sum(np.abs(np.asarray(dense).sum(1) - a)) < 0.2
+    assert np.sum(np.abs(np.asarray(dense).sum(0) - a)) < 0.2
+
+
+def test_fallback_is_bitwise_reproducible():
+    """fold_in(key, attempt) re-keying: the whole recovery path is
+    deterministic end to end."""
+    solver = _faulted(SparGWSolver(s=8 * N, outer_iters=8), at_iter=1,
+                      kind="nan", persistent=True)
+    o1 = solve(_problem(), solver, key=KEY, on_failure="fallback")
+    o2 = solve(_problem(), solver, key=KEY, on_failure="fallback")
+    assert _trees_equal(o1, o2)
+
+
+def test_fallback_rekeys_with_fold_in():
+    """The first fallback attempt must see fold_in(key, 1), not the raw
+    key — a regression guard on deterministic retry PRNG."""
+    prob = _problem()
+    solver = _faulted(SparGWSolver(s=8 * N, outer_iters=8), at_iter=0,
+                      kind="nan", persistent=True)
+    out = solve(prob, solver, key=KEY, on_failure="fallback")
+    chain = fallback_chain(prob, exclude=("spar_gw",))
+    expected = solve(prob, chain[0], key=jax.random.fold_in(KEY, 1))
+    assert _trees_equal(out, expected)
+
+
+def test_fallback_chain_eligibility_gating():
+    small = _problem()
+    names = [type(s).name for s in fallback_chain(small)]
+    assert names == ["lowrank_gw", "quantized_gw", "spar_gw", "dense_gw"]
+    # unbalanced problems are ineligible for lowrank
+    unbal = _problem(lam=1.0)
+    names = [type(s).name for s in fallback_chain(unbal)]
+    assert "lowrank_gw" not in names
+    # l1 loss is not decomposable -> no lowrank either
+    names = [type(s).name for s in fallback_chain(_problem(loss="l1"))]
+    assert "lowrank_gw" not in names
+    # without a key only dense remains
+    names = [type(s).name for s in fallback_chain(small,
+                                                  key_available=False)]
+    assert names == ["dense_gw"]
+    # exclusion drops the already-tried rung
+    names = [type(s).name for s in fallback_chain(small,
+                                                  exclude=("spar_gw",))]
+    assert "spar_gw" not in names
+
+
+def test_on_failure_under_tracing_raises_clear_error():
+    solver = DenseGWSolver(outer_iters=2, inner_iters=5)
+    prob = _problem()
+
+    def traced(p):
+        return solve(p, solver, on_failure="fallback", validate=False)
+
+    with pytest.raises(ValueError, match="jit/vmap"):
+        jax.jit(traced)(prob)
+
+
+# ---------------------------------------------------------------------------
+# status lattice / output plumbing
+# ---------------------------------------------------------------------------
+
+def test_status_join_prefers_worse_code():
+    ok = SolveStatus.healthy(CONVERGED)
+    bad = SolveStatus(code=jnp.int32(DIVERGED), fail_iter=jnp.int32(4),
+                      last_err=jnp.float32(0.5), n_rescues=jnp.int32(1))
+    j = ok.join(bad)
+    assert j.describe() == "DIVERGED"
+    assert int(j.fail_iter) == 4
+    assert int(j.n_rescues) == 1
+    assert ok.join(SolveStatus.healthy(MAXITER)).describe() == "MAXITER"
+
+
+def test_status_codes_are_severity_ordered():
+    assert CONVERGED < MAXITER < STALLED < DIVERGED
+
+
+def test_every_solver_returns_status():
+    for name, solver in _fast_configs().items():
+        out = solve(_problem(), solver, key=KEY)
+        assert out.status is not None, name
+        assert out.status.describe() in ("CONVERGED", "MAXITER", "STALLED"), \
+            name
+
+
+def test_output_status_survives_pytree_roundtrip():
+    out = solve(_problem(), DenseGWSolver(outer_iters=3, inner_iters=10))
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    out2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert out2.status.describe() == out.status.describe()
+
+
+# ---------------------------------------------------------------------------
+# tiny-ε overflow paths (satellite: never silent NaN)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eps", [1e-4, 1e-5])
+@pytest.mark.parametrize("stable", [True, False])
+def test_tiny_epsilon_concentrated_marginals(eps, stable):
+    """ε ≤ 1e-4 with near-degenerate marginals: either the solve stays
+    finite or it reports DIVERGED — silent NaN/zero couplings are the bug
+    class this layer exists to kill."""
+    prob = _problem(concentrated=True)
+    solver = DenseGWSolver(epsilon=eps, stable=stable, outer_iters=8,
+                           inner_iters=50, max_rescues=0)
+    out = solve(prob, solver)
+    code = out.status.describe()
+    if code != "DIVERGED":
+        T = np.asarray(out.coupling)
+        assert np.all(np.isfinite(T))
+        assert T.sum() > 1e-6                # no silent mass collapse
+        assert np.isfinite(float(out.value))
+
+
+@pytest.mark.parametrize("eps", [1e-4, 1e-5])
+def test_tiny_epsilon_rescue_recovers_plain_domain(eps):
+    """The plain-domain kernel exp(-C/ε) underflows to zero mass at tiny
+    ε; ε-doubling rescue must recover a finite coupling in-jit."""
+    prob = _problem(concentrated=True)
+    solver = DenseGWSolver(epsilon=eps, stable=False, outer_iters=8,
+                           inner_iters=50, max_rescues=8)
+    out = solve(prob, solver)
+    if out.status.describe() != "DIVERGED":
+        assert np.all(np.isfinite(np.asarray(out.coupling)))
+        assert int(out.status.n_rescues) >= 0
+
+
+@pytest.mark.parametrize("eps", [1e-4, 1e-5])
+def test_tiny_epsilon_sparse_sinkhorn_finite(eps):
+    """core.sinkhorn sparse log-domain path at tiny ε stays finite."""
+    from repro.core.sinkhorn import sparse_sinkhorn_logdomain
+    n, s = 16, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    rows = jax.random.randint(k1, (s,), 0, n)
+    cols = jax.random.randint(k2, (s,), 0, n)
+    C = jax.random.uniform(k3, (s,)) * 4.0
+    a = jnp.full((n,), 1e-4).at[0].set(1.0 - (n - 1) * 1e-4)
+    b = jnp.ones(n) / n
+    T = sparse_sinkhorn_logdomain(a, b, rows, cols, -C / eps, n, n, 200,
+                                  tol=1e-9)
+    assert np.all(np.isfinite(np.asarray(T)))
+
+
+@pytest.mark.parametrize("eps", [1e-4, 1e-5])
+def test_tiny_epsilon_lr_dykstra_finite(eps):
+    """LR-Dykstra fed mirror-step kernels built at tiny ε (huge exponent
+    ratios) must return finite feasible factors."""
+    m = n = 16
+    r = 4
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = jnp.full((m,), 1e-4).at[0].set(1.0 - (m - 1) * 1e-4)
+    b = jnp.ones(n) / n
+    # kernels spanning e^{±1/ε}-ish dynamic range, clipped to f32-finite
+    K1 = jnp.clip(jnp.exp(jax.random.normal(k1, (m, r)) / jnp.sqrt(eps)),
+                  1e-30, 1e30)
+    K2 = jnp.clip(jnp.exp(jax.random.normal(k2, (n, r)) / jnp.sqrt(eps)),
+                  1e-30, 1e30)
+    k3 = jnp.full((r,), 1.0 / r)
+    Q, R, g = lr_dykstra(K1, K2, k3, a, b, 1e-10, 200, 1e-8)
+    for arr in (Q, R, g):
+        assert np.all(np.isfinite(np.asarray(arr)))
+    np.testing.assert_allclose(np.asarray(Q.sum(1)), np.asarray(a),
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(R.sum(1)), np.asarray(b),
+                               atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness resilience (satellite: run.py survives failing solvers)
+# ---------------------------------------------------------------------------
+
+def test_run_py_records_failure_row(tmp_path, monkeypatch, capsys):
+    import json
+    import sys as _sys
+    _sys.path.insert(0, ".")
+    try:
+        from benchmarks import run as bench_run
+
+        def boom(name, **kw):
+            raise RuntimeError(f"synthetic failure in {name}")
+
+        monkeypatch.setattr("benchmarks.common.bench_solver", boom)
+        json_path = str(tmp_path / "bench.json")
+        with pytest.raises(SystemExit):
+            bench_run.run_solver_mode(["dense_gw"], n=16, loss="l2", reps=1,
+                                      json_path=json_path)
+        rows = json.load(open(json_path))["results"]
+        assert rows and rows[0]["status"] == "failed"
+        assert "synthetic failure" in rows[0]["error"]
+    finally:
+        _sys.path.remove(".")
