@@ -1,0 +1,171 @@
+"""Serving-layer load generator — GWServer vs naive sequential solving.
+
+Two workloads (DESIGN.md §9, EXPERIMENTS.md §Serving):
+
+catalog  — a catalog-matching stream: every request compares one of a
+           small set of recurring query geometries against one shared
+           reference geometry. This is the cache-hot regime: padded
+           device artifacts for both sides recur, so after one warm pass
+           the GeometryCache serves ~every submit from cache and the
+           bucketed executables are compiled. The server numbers are
+           **steady state** (one untimed warm pass, then
+           ``reset_stats()`` and a measured pass).
+
+cold     — every request carries brand-new geometries (single pass on a
+           fresh server, no warm-up). Latencies include the bucket
+           compiles; this shows what bucketing alone buys when the cache
+           can't help.
+
+The sequential baseline replays the catalog stream through plain
+``repro.solve`` calls in a cold process region — naive serving has no
+warm phase, because with per-(m, n) compilation every new request shape
+*is* a cold start. That compile-per-shape tail is exactly the failure
+mode the bucketing layer removes, so the baseline keeps it.
+
+Rows go to ``BENCH_PR7.json`` (dataset ``serve``) via
+``common.merge_bench_json``; p50/p95/p99 come from the shared
+``common.percentiles`` helper. ``--quick`` shrinks the stream for the CI
+serve-smoke job (which asserts finite p99 and a nonzero catalog cache
+hit rate — not the speedup, which is hardware-dependent).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import merge_bench_json, percentiles, record
+
+JSON_PATH = "BENCH_PR7.json"
+
+
+def _geom(n: int, seed: int):
+    import jax.numpy as jnp
+
+    import repro
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, 2)).astype(np.float32)
+    C = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1)).astype(np.float32)
+    w = np.full(n, 1.0 / n, np.float32)
+    return repro.Geometry(jnp.asarray(C), jnp.asarray(w))
+
+
+def catalog_stream(n_requests: int, sizes, n_queries: int):
+    """Recurring query geometries vs one shared reference geometry."""
+    import repro
+    ref = _geom(32, seed=999)
+    queries = [_geom(sizes[i % len(sizes)], seed=100 + i)
+               for i in range(n_queries)]
+    return [repro.QuadraticProblem(queries[i % n_queries], ref)
+            for i in range(n_requests)]
+
+
+def cold_stream(n_requests: int, sizes):
+    """Every request is a brand-new geometry pair."""
+    import repro
+    return [repro.QuadraticProblem(_geom(sizes[i % len(sizes)], 500 + 2 * i),
+                                   _geom(sizes[(i + 1) % len(sizes)],
+                                         501 + 2 * i))
+            for i in range(n_requests)]
+
+
+def run_sequential(problems, solver):
+    """Naive serving: one eager ``repro.solve`` per request, in order."""
+    import repro
+    lat = []
+    t0 = time.perf_counter()
+    for p in problems:
+        t1 = time.perf_counter()
+        out = repro.solve(p, solver)
+        jax.block_until_ready(out.value)
+        lat.append(time.perf_counter() - t1)
+    return lat, time.perf_counter() - t0
+
+
+def run_served(problems, solver, warm_passes: int = 1, config=None):
+    """Submit the stream through a GWServer; returns per-request
+    latencies, wall time, and the server's stats dict."""
+    from repro.serve import GWServer, ServeConfig
+    srv = GWServer(config or ServeConfig(max_batch=8, max_wait_s=60.0,
+                                         on_failure="none"))
+    for _ in range(warm_passes):
+        srv.results([srv.submit(p, solver) for p in problems])
+    srv.reset_stats()
+    t0 = time.perf_counter()
+    res = srv.results([srv.submit(p, solver) for p in problems])
+    total = time.perf_counter() - t0
+    return [r.latency_s for r in res], total, srv.stats()
+
+
+_STAT_KEYS = ("n_batches", "mean_batch_lanes", "filler_lane_frac",
+              "n_failed", "n_fallbacks", "cache_hits", "cache_misses",
+              "cache_evictions", "cache_hit_rate")
+
+
+def _row(workload: str, mode: str, lat_s, total_s: float,
+         stats=None, speedup=None) -> dict:
+    p = percentiles(lat_s)
+    n = len(lat_s)
+    rps = n / total_s if total_s > 0 else 0.0
+    row = {
+        "workload": workload,
+        "mode": mode,
+        "n_requests": n,
+        "throughput_rps": round(rps, 3),
+        "p50_ms": round(p["p50"] * 1e3, 3),
+        "p95_ms": round(p["p95"] * 1e3, 3),
+        "p99_ms": round(p["p99"] * 1e3, 3),
+    }
+    if stats is not None:
+        row.update({k: (round(stats[k], 4) if isinstance(stats[k], float)
+                        else stats[k]) for k in _STAT_KEYS})
+    if speedup is not None:
+        row["speedup_vs_sequential"] = round(speedup, 2)
+    record(f"serve/{workload}/{mode}", (total_s / max(n, 1)) * 1e6,
+           f"rps={rps:.2f};p50_ms={row['p50_ms']};p99_ms={row['p99_ms']}"
+           + (f";hit_rate={stats['cache_hit_rate']:.3f}" if stats else "")
+           + (f";speedup={row['speedup_vs_sequential']}"
+              if speedup is not None else ""))
+    return row
+
+
+def main(quick: bool = False, json_path: str = JSON_PATH) -> list:
+    import repro
+    if quick:
+        sizes, n_requests, n_queries = (12, 18, 28), 10, 3
+    else:
+        sizes = (12, 14, 18, 22, 26, 28, 30, 38, 44, 60)
+        n_requests, n_queries = 64, 10
+    solver = repro.get_solver("dense_gw").default_config(48)
+
+    results = []
+    catalog = catalog_stream(n_requests, sizes, n_queries)
+    seq_lat, seq_total = run_sequential(catalog, solver)
+    results.append(_row("catalog", "sequential", seq_lat, seq_total))
+    srv_lat, srv_total, stats = run_served(catalog, solver, warm_passes=1)
+    seq_rps = len(seq_lat) / seq_total
+    srv_rps = len(srv_lat) / srv_total if srv_total > 0 else 0.0
+    results.append(_row("catalog", "served", srv_lat, srv_total, stats,
+                        speedup=srv_rps / seq_rps if seq_rps > 0 else 0.0))
+
+    cold = cold_stream(n_requests, sizes)
+    cold_lat, cold_total, cold_stats = run_served(cold, solver,
+                                                  warm_passes=0)
+    results.append(_row("cold", "served", cold_lat, cold_total, cold_stats))
+
+    if json_path:
+        merge_bench_json(json_path, "serve", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small stream")
+    ap.add_argument("--json", default=JSON_PATH, metavar="PATH",
+                    help="perf-trajectory JSON ('' disables)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick, json_path=args.json)

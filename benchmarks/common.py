@@ -9,6 +9,11 @@ import time
 import jax
 import numpy as np
 
+# shared percentile helper (p50/p95/p99) — single definition for every
+# BENCH_*.json writer, so serve-layer and solver rows report the same
+# tail statistics
+from repro.serve.metrics import percentiles  # noqa: F401  (re-export)
+
 FULL = bool(os.environ.get("REPRO_BENCH_FULL"))
 
 _rows = []
@@ -45,16 +50,30 @@ def merge_bench_json(path: str, dataset: str, results: list) -> None:
           file=sys.stderr)
 
 
-def timed(fn, *args, reps: int = 1, warmup: bool = True):
-    """Wall-time fn; blocks on jax outputs. Returns (seconds, last_result)."""
+def timed_samples(fn, *args, reps: int = 1, warmup: bool = True):
+    """Per-rep wall times of ``fn`` (blocks on jax outputs each rep).
+
+    Returns ``(samples, last_result)`` where ``samples`` is a list of
+    ``reps`` individual call durations in seconds — feed it to
+    :func:`percentiles` for p50/p95/p99. ``warmup=True`` runs one
+    untimed call first so compilation never lands in the samples.
+    """
     if warmup:
         out = fn(*args)
         jax.block_until_ready(out)
-    t0 = time.time()
+    samples = []
     for _ in range(reps):
+        t0 = time.time()
         out = fn(*args)
         jax.block_until_ready(out)
-    return (time.time() - t0) / reps, out
+        samples.append(time.time() - t0)
+    return samples, out
+
+
+def timed(fn, *args, reps: int = 1, warmup: bool = True):
+    """Wall-time fn; blocks on jax outputs. Returns (seconds, last_result)."""
+    samples, out = timed_samples(fn, *args, reps=reps, warmup=warmup)
+    return sum(samples) / len(samples), out
 
 
 def live_device_bytes() -> int:
@@ -85,10 +104,13 @@ def bench_solver(name: str, n: int = 120, loss: str = "l2", reps: int = 3,
     if solver_kw:
         solver = dataclasses.replace(solver, **solver_kw)
     key = jax.random.PRNGKey(0)
-    sec, out = timed(lambda: repro.solve(problem, solver, key=key),
-                     reps=reps)
+    samples, out = timed_samples(lambda: repro.solve(problem, solver, key=key),
+                                 reps=reps)
+    sec = sum(samples) / len(samples)
+    pcts = percentiles(samples)
     status = out.status.describe() if out.status is not None else "UNKNOWN"
     record(f"solve/{dataset}/{loss}/n{n}/{name}", sec * 1e6,
            f"value={float(out.value):.5f};n_iters={int(out.n_iters)};"
-           f"converged={bool(out.converged)};status={status}")
-    return sec, out
+           f"converged={bool(out.converged)};status={status};"
+           f"p50_us={pcts['p50'] * 1e6:.1f};p99_us={pcts['p99'] * 1e6:.1f}")
+    return sec, out, pcts

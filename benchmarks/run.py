@@ -43,7 +43,7 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
         # a failing solver records a failure row and the suite moves on —
         # one broken rung must not abort the whole benchmark run
         try:
-            sec, out = bench_solver(name, n=n, loss=loss, reps=reps)
+            sec, out, pcts = bench_solver(name, n=n, loss=loss, reps=reps)
         except Exception as exc:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
@@ -64,6 +64,9 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
             "loss": loss,
             "n": n,
             "wall_time_s": round(sec, 6),
+            "p50_s": round(pcts["p50"], 6),
+            "p95_s": round(pcts["p95"], 6),
+            "p99_s": round(pcts["p99"], 6),
             "value": float(out.value),
             "converged": bool(out.converged),
             "n_iters": int(out.n_iters),
@@ -79,7 +82,7 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
 _SUITE = ("bench_fig2", "bench_fig3_ugw", "bench_fig4_sensitivity",
           "bench_fig5_scaling", "bench_fig6_fgw", "bench_grid_vs_coo",
           "bench_spar_cost", "bench_tables23_graphs", "bench_multiscale",
-          "bench_lowrank", "bench_lm_step")
+          "bench_lowrank", "bench_lm_step", "bench_serve")
 
 
 def run_full_suite() -> None:

@@ -1,26 +1,57 @@
-"""Serving demo: batched generation with a KV cache + GW-distance scoring
-between request batches (structural similarity of hidden geometries).
+"""GW-as-a-service demo: catalog matching through the solve server.
+
+A catalog-matching workload — "score every incoming shape against a
+reference shape" — is the serving layer's home turf: requests arrive
+with diverse sizes (bucketed + batched into a handful of vmapped
+executables) and the reference geometry recurs on every request (its
+padded device artifact is served from the content-hash cache after the
+first miss). Each request still gets its own health status, and an
+unhealthy one falls back through the solver ladder without touching its
+bucket-mates.
+
+The legacy LM serving demo moved to examples/serve_lm_demo.py.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
-import jax
+import numpy as np
 import jax.numpy as jnp
 
-from repro.configs import base as cb
-from repro.launch.serve import generate, gw_similarity
-from repro.models import build_model
+import repro
+from repro.serve import GWServer, ServeConfig
 
-cfg = cb.get_reduced("llama3-8b")
-model = build_model(cfg)
-params = model.init(jax.random.PRNGKey(0))
 
-prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 24), 0,
-                             cfg.vocab_size)
-seqs = generate(model, params, prompts, max_new=16)
-print("generated:", seqs.shape)
+def make_shape(n, seed, twist=0.0):
+    """A noisy spiral point set, as a distance-matrix Geometry."""
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0, 3 * np.pi, n) + twist
+    pts = np.stack([t * np.cos(t), t * np.sin(t)], 1)
+    pts += 0.1 * rng.standard_normal(pts.shape)
+    C = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1))
+    return repro.Geometry(jnp.asarray(C, jnp.float32),
+                          jnp.full(n, 1.0 / n, jnp.float32))
 
-other = jax.random.randint(jax.random.PRNGKey(8), (4, 24), 0, cfg.vocab_size)
-print("GW(batch, itself)    =",
-      float(gw_similarity(model, params, prompts, prompts, s=24)))
-print("GW(batch, other)     =",
-      float(gw_similarity(model, params, prompts, other, s=24)))
+
+reference = make_shape(32, seed=0)
+
+server = GWServer(ServeConfig(max_batch=8, max_wait_s=0.5))
+solver = repro.get_solver("dense_gw").default_config(48)
+
+# a stream of queries with diverse sizes; several recur (catalog regime)
+sizes = [14, 20, 26, 14, 30, 20, 14, 26]
+rids = [server.submit(
+            repro.QuadraticProblem(make_shape(n, seed=i % 4, twist=0.3 * i),
+                                   reference),
+            solver)
+        for i, n in enumerate(sizes)]
+
+print("query -> GW distance to reference:")
+for res in server.results(rids):
+    print(f"  rid={res.rid} shape={res.shape} -> bucket{res.padded_shape} "
+          f"value={res.value:.5f} status={res.status_name}"
+          f"{' (fallback)' if res.fell_back else ''}")
+
+stats = server.stats()
+print(f"batches={stats['n_batches']} "
+      f"mean_lanes={stats['mean_batch_lanes']:.1f} "
+      f"cache_hit_rate={stats['cache_hit_rate']:.2f} "
+      f"p50={stats['latency_p50_ms']:.0f}ms p99={stats['latency_p99_ms']:.0f}ms")

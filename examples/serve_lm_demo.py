@@ -1,0 +1,27 @@
+"""LM serving demo: batched generation with a KV cache + GW-distance
+scoring between request batches (structural similarity of hidden
+geometries). The GW solve-server demo lives in examples/serve_demo.py.
+
+Run:  PYTHONPATH=src python examples/serve_lm_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.launch.serve import generate, gw_similarity
+from repro.models import build_model
+
+cfg = cb.get_reduced("llama3-8b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 24), 0,
+                             cfg.vocab_size)
+seqs = generate(model, params, prompts, max_new=16)
+print("generated:", seqs.shape)
+
+other = jax.random.randint(jax.random.PRNGKey(8), (4, 24), 0, cfg.vocab_size)
+print("GW(batch, itself)    =",
+      float(gw_similarity(model, params, prompts, prompts, s=24)))
+print("GW(batch, other)     =",
+      float(gw_similarity(model, params, prompts, other, s=24)))

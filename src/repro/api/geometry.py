@@ -128,5 +128,58 @@ class Geometry:
         D = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
         return jnp.maximum(D, 0.0)
 
+    def content_hash(self) -> str:
+        """Stable content digest of the geometry — the serving cache key.
+
+        Hashes the *defining* arrays (dtype-, shape- and layout-stable:
+        inputs are brought to C-contiguous host buffers first, so numpy
+        vs jax arrays and C- vs F-ordered views of the same values hash
+        equal). Construction-path invariant for a given representation:
+        ``Geometry.from_points(p, w)`` and ``Geometry(None, w, points=p)``
+        hash equal. A point-cloud geometry is hashed through its points —
+        the implied n×n cost is **never materialized** — so it deliberately
+        hashes differently from a geometry built from the densified cost:
+        the two back different artifact families (factored vs dense), and
+        establishing value equality would require the very O(n²)
+        materialization the point-cloud path exists to avoid.
+
+        Host-side only (raises on tracers); memoized on the instance, so
+        repeated cache lookups for the same object pay the O(bytes) sha256
+        once.
+        """
+        cached = getattr(self, "_content_hash", None)
+        if cached is not None:
+            return cached
+        import hashlib
+
+        import numpy as np
+        if not all(is_concrete(x) for x in
+                   (self.cost, self.weights, self.features, self.points)
+                   if x is not None):
+            raise ValueError(
+                "Geometry.content_hash needs concrete arrays; it is a "
+                "host-side cache key, not a traceable function")
+        h = hashlib.sha256()
+
+        def feed(tag: bytes, arr):
+            if arr is None:
+                h.update(tag + b":none;")
+                return
+            a = np.ascontiguousarray(np.asarray(arr))
+            h.update(tag + b":" + str(a.dtype).encode()
+                     + b":" + repr(a.shape).encode() + b";")
+            h.update(a.tobytes())
+
+        if self.cost is not None:
+            feed(b"cost", self.cost)
+            feed(b"pts", self.points)     # advisory, but still content
+        else:
+            feed(b"pts", self.points)
+        feed(b"w", self.weights)
+        feed(b"feat", self.features)
+        digest = h.hexdigest()
+        object.__setattr__(self, "_content_hash", digest)
+        return digest
+
 
 register_pytree_dataclass(Geometry, ("cost", "weights", "features", "points"))

@@ -1,0 +1,43 @@
+"""GW-as-a-service: batched, cached, observable solving (DESIGN.md §9).
+
+The production front door over ``repro.solve``: size-bucketed request
+batching (one vmapped jit per bucket signature), a content-hash-keyed
+geometry artifact cache, asynchronous dispatch with donated buffers, and
+per-request health/fallback semantics.
+
+    from repro.serve import GWServer, ServeConfig
+
+    server = GWServer(ServeConfig(max_batch=8))
+    rids = [server.submit(p, solver="dense_gw") for p in problems]
+    for res in server.results(rids):
+        print(res.rid, res.value, res.status_name, res.latency_s)
+    print(server.stats())
+"""
+from repro.serve.batching import (
+    DEFAULT_BUCKETS,
+    PAD_WEIGHT,
+    batch_signature,
+    bucket_for,
+    next_pow2,
+    pad_geometry,
+    pad_problem,
+)
+from repro.serve.cache import GeometryCache
+from repro.serve.metrics import ServeMetrics, percentiles
+from repro.serve.server import GWServer, RequestResult, ServeConfig
+
+__all__ = [
+    "GWServer",
+    "ServeConfig",
+    "RequestResult",
+    "GeometryCache",
+    "ServeMetrics",
+    "percentiles",
+    "bucket_for",
+    "next_pow2",
+    "pad_geometry",
+    "pad_problem",
+    "batch_signature",
+    "DEFAULT_BUCKETS",
+    "PAD_WEIGHT",
+]

@@ -1,0 +1,147 @@
+"""Size-bucketed request batching — padding + stacking (DESIGN.md §9).
+
+Serving traffic arrives with arbitrary geometry sizes; compiling one XLA
+executable per (m, n) pair is the naive-serving failure mode (every new
+shape pays ~seconds of compile). The batching layer rounds every request
+up to a small set of **size buckets** and executes each bucket as one
+vmapped stack under one jit, so steady-state traffic touches a handful of
+executables no matter how diverse the request shapes are.
+
+Padding discipline (the PR-3 lesson, DESIGN.md §6): padded slots get
+weight ``PAD_WEIGHT = 1e-30`` — a *normal* float32, because XLA CPU
+flushes subnormals and a flushed-to-zero weight re-enters kernels through
+``log``/clamp paths as full-mass garbage. Padded cost/point/feature slots
+are zero. A padded slot then carries ~1e-30 of coupling mass: its
+contribution to the objective and to the real slots' Sinkhorn updates
+sits ~30 decades below the live entries, under float32 resolution — the
+real block of a padded solve matches the unpadded solve to rtol ≲ 1e-5
+(regression-tested at the serving boundary).
+
+Batch-lane padding is a separate axis: a flush with fewer requests than
+the lane count is topped up with **filler lanes** replicating lane 0
+(fault hooks disarmed). vmap lanes are mathematically independent, and
+the while-loop driver's lane-freeze semantics (DESIGN.md §8) make them
+bitwise independent in practice — a request solved next to fillers or
+poisoned lane-mates returns exactly its solo result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.geometry import Geometry
+from repro.api.problem import QuadraticProblem
+
+# pad weight: the smallest *normal* float32 scale that survives XLA CPU's
+# subnormal flush (same constant as multiscale's _PAD_WEIGHT / lowrank's
+# _TINY — the PR-3 defect class)
+PAD_WEIGHT = 1e-30
+
+# default geometry-size buckets: dense-ish coverage where small-problem
+# traffic lives, power-of-two spacing above
+DEFAULT_BUCKETS = (16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512)
+
+
+def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest configured bucket ≥ n; beyond the largest, the next power
+    of two (shape diversity is already negligible up there)."""
+    if n <= 0:
+        raise ValueError(f"geometry size must be positive, got {n}")
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+# Never dispatch a width-1 stack: XLA collapses a degenerate batch-1
+# dot_general into a different gemm lowering than both the eager solve and
+# every width ≥ 2 stack, so width-1 is the one batch shape whose per-lane
+# bits differ from all others (measured on CPU). With a floor of 2, a
+# request's bits are invariant to batch width AND equal to its eager
+# ``repro.solve`` bits — the property the serving-boundary inertness
+# tests pin down.
+MIN_LANES = 2
+
+
+def next_pow2(n: int) -> int:
+    """Lane-count rounding: batch widths are powers of two (with a floor
+    of :data:`MIN_LANES`) so partially filled flushes reuse the same
+    executables as full ones — and per-lane bits stay width-invariant."""
+    b = MIN_LANES
+    while b < max(1, n):
+        b <<= 1
+    return b
+
+
+def _pad_matrix(x, rows: int, cols: int):
+    return jnp.pad(jnp.asarray(x),
+                   ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def pad_geometry(geom: Geometry, nb: int) -> Geometry:
+    """Pad one geometry to bucket size ``nb`` (weights at PAD_WEIGHT,
+    cost/points/features zero-padded). No-op when already at size."""
+    n = geom.n
+    if n > nb:
+        raise ValueError(f"geometry of size {n} does not fit bucket {nb}")
+    if n == nb:
+        return geom
+    pad = nb - n
+    weights = jnp.pad(jnp.asarray(geom.weights), (0, pad),
+                      constant_values=PAD_WEIGHT)
+    cost = None if geom.cost is None else _pad_matrix(geom.cost, nb, nb)
+    points = (None if geom.points is None
+              else _pad_matrix(geom.points, nb, geom.points.shape[1]))
+    features = (None if geom.features is None
+                else _pad_matrix(geom.features, nb, geom.features.shape[1]))
+    return Geometry(cost, weights, features=features, points=points,
+                    validate=False)
+
+
+def pad_problem(problem: QuadraticProblem, mb: int, nb: int,
+                geom_x=None, geom_y=None) -> QuadraticProblem:
+    """Pad a problem to bucket shape (mb, nb). Callers holding cached
+    padded geometries pass them via ``geom_x``/``geom_y`` (the serving
+    hot path); otherwise both sides are padded here."""
+    gx = pad_geometry(problem.geom_x, mb) if geom_x is None else geom_x
+    gy = pad_geometry(problem.geom_y, nb) if geom_y is None else geom_y
+    M = None if problem.M is None else _pad_matrix(problem.M, mb, nb)
+    return QuadraticProblem(gx, gy, loss=problem.loss,
+                            fused_penalty=problem.fused_penalty, M=M,
+                            lam=problem.lam, validate=False)
+
+
+def batch_signature(item) -> Any:
+    """Hashable executable identity of one padded (problem, solver, key)
+    tuple: the pytree structure (which carries every static knob — loss,
+    solver meta fields, None-presence) plus the shape/dtype of every
+    leaf. Two requests share a bucket iff their signatures match — then
+    stacking is well-defined and the vmapped executable is shared."""
+    leaves, treedef = jax.tree.flatten(item)
+    avals = tuple((jnp.shape(leaf), jnp.result_type(leaf))
+                  for leaf in leaves)
+    return (treedef, avals)
+
+
+def stack_items(items: Sequence[Any]):
+    """Stack same-signature (problem, solver, key) tuples into one
+    batched pytree (leading axis = lane)."""
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *items)
+
+
+def disarm_fault(solver):
+    """A copy of ``solver`` with any fault hook disarmed (at_iter=-1) —
+    filler lanes replicate a real lane's config but must never fire its
+    chaos hook."""
+    fault = getattr(solver, "fault", None)
+    if fault is None:
+        return solver
+    return dataclasses.replace(
+        solver, fault=dataclasses.replace(fault, at_iter=jnp.int32(-1)))

@@ -1,0 +1,100 @@
+"""Server observability — request/batch counters + latency percentiles.
+
+One ``ServeMetrics`` instance rides on each :class:`~repro.serve.server
+.GWServer`; every counter is cheap host-side bookkeeping (no device
+syncs), and :meth:`summary` flattens everything — including the geometry
+cache's hit/miss/eviction stats — into one JSON-ready dict, which is what
+``benchmarks/bench_serve.py`` records into ``BENCH_PR7.json`` and the
+serve-smoke CI job asserts on.
+
+``percentiles`` is the shared p50/p95/p99 helper: ``benchmarks/common.py``
+re-exports it so every BENCH_*.json writer reports the same tail
+statistics (satellite of PR 7 — means hide exactly the tail a serving
+layer exists to control).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_QS = (50, 95, 99)
+
+
+def percentiles(samples: Sequence[float],
+                qs: Sequence[int] = DEFAULT_QS) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` of ``samples`` (linear
+    interpolation; empty input yields NaNs so callers can't mistake "no
+    data" for "zero latency")."""
+    if len(samples) == 0:
+        return {f"p{q}": float("nan") for q in qs}
+    arr = np.asarray(list(samples), dtype=np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+class ServeMetrics:
+    """Counters + latency recorder for one server instance."""
+
+    def __init__(self):
+        self.n_submitted = 0
+        self.n_completed = 0
+        self.n_failed = 0        # unhealthy after the batched attempt
+        self.n_fallbacks = 0     # per-request fallback re-solves taken
+        self.n_batches = 0
+        self.n_lanes = 0         # total dispatched lanes incl. filler
+        self.n_filler_lanes = 0
+        self.latencies_s: List[float] = []
+        self.queue_waits_s: List[float] = []
+        self._t0 = time.perf_counter()
+
+    # -- recording ----------------------------------------------------------
+
+    def record_submit(self) -> float:
+        self.n_submitted += 1
+        return time.perf_counter()
+
+    def record_batch(self, n_real: int, n_lanes: int) -> None:
+        self.n_batches += 1
+        self.n_lanes += n_lanes
+        self.n_filler_lanes += n_lanes - n_real
+
+    def record_result(self, submitted_at: float, dispatched_at: float,
+                      failed: bool, fell_back: bool) -> float:
+        now = time.perf_counter()
+        latency = now - submitted_at
+        self.n_completed += 1
+        self.latencies_s.append(latency)
+        self.queue_waits_s.append(dispatched_at - submitted_at)
+        if failed:
+            self.n_failed += 1
+        if fell_back:
+            self.n_fallbacks += 1
+        return latency
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self, cache_stats: Optional[dict] = None) -> dict:
+        elapsed = time.perf_counter() - self._t0
+        lat = percentiles(self.latencies_s)
+        out = {
+            "n_submitted": self.n_submitted,
+            "n_completed": self.n_completed,
+            "n_failed": self.n_failed,
+            "n_fallbacks": self.n_fallbacks,
+            "n_batches": self.n_batches,
+            "mean_batch_lanes": (self.n_lanes / self.n_batches
+                                 if self.n_batches else 0.0),
+            "filler_lane_frac": (self.n_filler_lanes / self.n_lanes
+                                 if self.n_lanes else 0.0),
+            "throughput_rps": (self.n_completed / elapsed
+                               if elapsed > 0 else 0.0),
+            "latency_p50_ms": lat["p50"] * 1e3,
+            "latency_p95_ms": lat["p95"] * 1e3,
+            "latency_p99_ms": lat["p99"] * 1e3,
+            "queue_wait_p50_ms": percentiles(
+                self.queue_waits_s, (50,))["p50"] * 1e3,
+        }
+        if cache_stats is not None:
+            out.update({f"cache_{k}": v for k, v in cache_stats.items()})
+        return out

@@ -1,0 +1,325 @@
+"""``GWServer`` — the batched, cached, observable solve front door.
+
+Request lifecycle (DESIGN.md §9):
+
+    server = GWServer()
+    rid = server.submit(problem, solver="dense_gw", key=key)   # enqueue
+    server.poll(rid)        # "queued" | "running" | "done"
+    res = server.result(rid)            # blocks; RequestResult
+
+``submit`` resolves the solver (same rules as ``repro.solve``), pads both
+geometries to size buckets through the :class:`GeometryCache`, and
+enqueues the request under its **batch signature** (padded pytree
+structure + leaf avals). A bucket flushes when it reaches
+``max_batch`` requests or its oldest request is older than
+``max_wait_s`` (checked cooperatively on every submit/poll/result/flush —
+there is no background thread; drive the server from one thread and call
+``poll``/``flush`` to advance time-based flushes).
+
+A flush stacks the bucket into one vmapped jit call — filler lanes
+(replicas of lane 0 with fault hooks disarmed) round the lane count up to
+a power of two so partial flushes reuse full-batch executables. Dispatch
+is **asynchronous**: the jitted call returns device futures immediately
+(input stack buffers are donated), so the next bucket accumulates while
+XLA computes; ``result`` blocks on the batch and slices out one lane.
+
+Failure semantics are **per request**: each lane carries its own
+:class:`~repro.health.status.SolveStatus` (the health layer's vmap
+lane-isolation guarantee — one poisoned request cannot touch its
+bucket-mates' bits), and a lane that comes back DIVERGED/STALLED is —
+under ``on_failure="fallback"`` — re-solved solo through
+``repro.solve(..., on_failure="fallback")``, walking the PR-6 solver
+ladder for that request only.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.api.problem import QuadraticProblem
+from repro.api.solve import select_solver
+from repro.api.solvers import get_solver
+from repro.health.status import STALLED, STATUS_NAMES
+from repro.serve.batching import (
+    DEFAULT_BUCKETS,
+    batch_signature,
+    bucket_for,
+    disarm_fault,
+    next_pow2,
+    pad_problem,
+    stack_items,
+)
+from repro.serve.cache import GeometryCache
+from repro.serve.metrics import ServeMetrics
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Server policy knobs.
+
+    buckets       — geometry-size buckets requests are padded up to
+    max_batch     — flush a bucket once it holds this many requests
+    max_wait_s    — flush a non-empty bucket once its oldest request has
+                    waited this long (cooperative: checked on every
+                    server call, there is no background thread)
+    cache_entries — GeometryCache capacity (artifacts, LRU)
+    on_failure    — per-request policy for unhealthy lanes: "none"
+                    returns the DIVERGED/STALLED output as-is (inspect
+                    ``RequestResult.status``); "fallback" re-solves the
+                    request solo via ``repro.solve(on_failure=
+                    "fallback")`` (the PR-6 solver ladder)
+    donate        — donate the stacked problem buffers to the executor
+                    (they are per-flush temporaries; donation lets XLA
+                    reuse them for outputs)
+    """
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    max_batch: int = 8
+    max_wait_s: float = 0.02
+    cache_entries: int = 128
+    on_failure: str = "fallback"
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.on_failure not in ("none", "fallback"):
+            raise ValueError(
+                f"on_failure must be 'none' or 'fallback', got "
+                f"{self.on_failure!r}")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+
+@dataclass
+class RequestResult:
+    """One request's outcome.
+
+    output is the per-lane ``GWOutput`` at the *padded* bucket shape
+    (``padded_shape``) — or, when ``fell_back``, the fallback solve's
+    output at the original shape. ``coupling_dense()`` always returns the
+    original-shape coupling.
+    """
+    rid: int
+    value: float
+    output: Any
+    status: Any                       # per-request SolveStatus
+    status_name: str
+    failed: bool                      # unhealthy after the batched attempt
+    fell_back: bool                   # recovered via the solver ladder
+    shape: Tuple[int, int]            # original (m, n)
+    padded_shape: Tuple[int, int]
+    latency_s: float
+
+    def coupling_dense(self):
+        m, n = self.shape
+        dense = self.output.coupling_dense(*(
+            self.shape if self.fell_back else self.padded_shape))
+        return dense[:m, :n]
+
+
+@dataclass
+class _Request:
+    rid: int
+    problem: QuadraticProblem         # original, unpadded
+    solver: Any
+    key: Any
+    item: Any                         # (padded problem, solver, key)
+    sig: Any
+    shape: Tuple[int, int]
+    padded_shape: Tuple[int, int]
+    submitted_at: float
+    state: str = "queued"             # queued -> running -> done
+    batch: Any = None
+    lane: int = -1
+    result: Optional[RequestResult] = None
+
+
+@dataclass
+class _Batch:
+    out: Any                          # stacked GWOutput (device futures)
+    rids: List[int]                   # real lanes, in lane order
+    n_lanes: int
+    dispatched_at: float = field(default_factory=time.perf_counter)
+
+
+def _run_lane(problem, solver, key):
+    return solver.run(problem, key)
+
+
+class GWServer:
+    """Batched, cached, observable front door over the solver registry."""
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config or ServeConfig()
+        self.cache = GeometryCache(self.config.cache_entries)
+        self.metrics = ServeMetrics()
+        self._requests: Dict[int, _Request] = {}
+        self._queues: Dict[Any, List[int]] = {}
+        self._next_rid = 0
+        donate = (0,) if self.config.donate else ()
+        self._exec = jax.jit(jax.vmap(_run_lane), donate_argnums=donate)
+
+    # -- submit -------------------------------------------------------------
+
+    def submit(self, problem: QuadraticProblem,
+               solver: Union[str, Any, None] = None,
+               key: Optional[jax.Array] = None,
+               validate: bool = True) -> int:
+        """Enqueue one solve request; returns its request id."""
+        if solver is None:
+            solver = select_solver(problem)
+        elif isinstance(solver, str):
+            solver = get_solver(solver).default_config(max(problem.shape))
+        if key is None and getattr(type(solver), "requires_key", False):
+            raise ValueError(
+                f"{type(solver).__name__} needs a PRNG key: "
+                f"submit(problem, solver, key=jax.random.PRNGKey(seed))")
+        if validate and not getattr(problem, "_validated", False):
+            problem.check()
+        m, n = problem.shape
+        mb = bucket_for(m, self.config.buckets)
+        nb = bucket_for(n, self.config.buckets)
+        padded = pad_problem(problem, mb, nb,
+                             geom_x=self.cache.padded(problem.geom_x, mb),
+                             geom_y=self.cache.padded(problem.geom_y, nb))
+        item = (padded, solver, key)
+        sig = batch_signature(item)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = _Request(rid=rid, problem=problem, solver=solver, key=key,
+                       item=item, sig=sig, shape=(m, n),
+                       padded_shape=(mb, nb),
+                       submitted_at=self.metrics.record_submit())
+        self._requests[rid] = req
+        self._queues.setdefault(sig, []).append(rid)
+        if len(self._queues[sig]) >= self.config.max_batch:
+            self._flush_bucket(sig)
+        else:
+            self._pump()
+        return rid
+
+    # -- flushing -----------------------------------------------------------
+
+    def _pump(self) -> None:
+        """Flush every bucket whose oldest request exceeded max_wait_s."""
+        now = time.perf_counter()
+        for sig in list(self._queues):
+            rids = self._queues[sig]
+            if rids and (now - self._requests[rids[0]].submitted_at
+                         >= self.config.max_wait_s):
+                self._flush_bucket(sig)
+
+    def flush(self) -> None:
+        """Dispatch every non-empty bucket immediately."""
+        for sig in list(self._queues):
+            if self._queues[sig]:
+                self._flush_bucket(sig)
+
+    def _flush_bucket(self, sig) -> None:
+        rids = self._queues.pop(sig, [])
+        if not rids:
+            return
+        items = [self._requests[rid].item for rid in rids]
+        n_lanes = next_pow2(len(items))
+        if len(items) < n_lanes:
+            p0, s0, k0 = items[0]
+            items.extend([(p0, disarm_fault(s0), k0)]
+                         * (n_lanes - len(items)))
+        stacked_p, stacked_s, stacked_k = stack_items(items)
+        with warnings.catch_warnings():
+            # CPU backends can't alias every donated buffer — harmless
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            out = self._exec(stacked_p, stacked_s, stacked_k)
+        batch = _Batch(out=out, rids=rids, n_lanes=n_lanes)
+        self.metrics.record_batch(len(rids), n_lanes)
+        for lane, rid in enumerate(rids):
+            req = self._requests[rid]
+            req.state = "running"
+            req.batch = batch
+            req.lane = lane
+
+    # -- poll / result ------------------------------------------------------
+
+    def poll(self, rid: int) -> str:
+        """Non-blocking state of a request: queued / running / done.
+        Also advances time-based flushes (cooperative scheduling)."""
+        req = self._req(rid)
+        self._pump()
+        if req.state == "running":
+            value = req.batch.out.value
+            if getattr(value, "is_ready", lambda: True)():
+                return "done"
+        return "done" if req.state == "done" else req.state
+
+    def result(self, rid: int) -> RequestResult:
+        """Block until the request's batch completes; per-request outcome."""
+        req = self._req(rid)
+        if req.result is not None:
+            return req.result
+        if req.state == "queued":
+            self._flush_bucket(req.sig)
+        batch = req.batch
+        jax.block_until_ready(batch.out.value)
+        lane = req.lane
+        out = jax.tree.map(lambda x: x[lane], batch.out)
+        failed = bool(np.asarray(out.status.code) >= STALLED) or not bool(
+            np.all(np.isfinite(np.asarray(out.value))))
+        fell_back = False
+        if failed and self.config.on_failure == "fallback":
+            out, fell_back = self._fallback(req)
+        status_name = (STATUS_NAMES[int(np.asarray(out.status.code))]
+                       if out.status is not None else "UNKNOWN")
+        latency = self.metrics.record_result(
+            req.submitted_at, batch.dispatched_at, failed, fell_back)
+        req.state = "done"
+        req.result = RequestResult(
+            rid=rid, value=float(np.asarray(out.value)), output=out,
+            status=out.status, status_name=status_name, failed=failed,
+            fell_back=fell_back, shape=req.shape,
+            padded_shape=req.padded_shape, latency_s=latency)
+        req.batch = None          # release the stacked batch for GC
+        req.item = None
+        return req.result
+
+    def results(self, rids: Sequence[int]) -> List[RequestResult]:
+        """Drain a set of requests (flushes any still queued)."""
+        self.flush()
+        return [self.result(rid) for rid in rids]
+
+    def _fallback(self, req: _Request):
+        """Re-solve one failed request solo through the PR-6 ladder. The
+        original (unpadded) problem is used — the fallback path owes the
+        caller a healthy answer, not a bucket-shaped one."""
+        import repro
+        try:
+            out = repro.solve(req.problem, req.solver, key=req.key,
+                              on_failure="fallback")
+        except Exception:  # noqa: BLE001 — fallback is best-effort
+            return jax.tree.map(lambda x: x[req.lane], req.batch.out), False
+        recovered = bool(np.asarray(out.status.code) < STALLED) and bool(
+            np.all(np.isfinite(np.asarray(out.value))))
+        if not recovered:
+            return jax.tree.map(lambda x: x[req.lane], req.batch.out), False
+        return out, True
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """One flat dict: request/batch/latency metrics + cache counters."""
+        return self.metrics.summary(self.cache.stats())
+
+    def reset_stats(self) -> None:
+        """Zero metrics and cache counters, keeping compiled executables
+        and cached artifacts warm — the steady-state measurement hook."""
+        self.metrics = ServeMetrics()
+        self.cache.reset_counters()
+
+    def _req(self, rid: int) -> _Request:
+        try:
+            return self._requests[rid]
+        except KeyError:
+            raise KeyError(f"unknown request id {rid}") from None

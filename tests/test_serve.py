@@ -1,0 +1,440 @@
+"""Serving layer (repro.serve): bucketing, padding inertness, the
+content-hash geometry cache, batched lane isolation, per-request
+fallback, and server observability."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import DenseGWSolver, Geometry, QuadraticProblem
+from repro.health import DIVERGED, STALLED, FaultSpec
+from repro.serve import (
+    DEFAULT_BUCKETS,
+    PAD_WEIGHT,
+    GeometryCache,
+    GWServer,
+    RequestResult,
+    ServeConfig,
+    batch_signature,
+    bucket_for,
+    next_pow2,
+    pad_geometry,
+    pad_problem,
+    percentiles,
+)
+from repro.serve.batching import MIN_LANES
+
+KEY = jax.random.PRNGKey(0)
+
+BASE = DenseGWSolver(tol=1e-6, inner_tol=1e-8, outer_iters=10)
+CLEAN = dataclasses.replace(BASE, max_rescues=0,
+                            fault=FaultSpec(at_iter=-1, kind="nan"))
+POISONED = dataclasses.replace(BASE, max_rescues=0,
+                               fault=FaultSpec(at_iter=2, kind="nan"))
+
+
+def _geom(seed: int, n: int, scale: float = 1.0) -> Geometry:
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 2)) * scale
+    C = jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+    return Geometry(C, jnp.ones(n) / n)
+
+
+def _problem(seed: int, m: int, n: int = None) -> QuadraticProblem:
+    n = m if n is None else n
+    return QuadraticProblem(_geom(seed, m), _geom(seed + 50, n, scale=1.2))
+
+
+def _bits(tree_a, tree_b) -> bool:
+    la, ta = jax.tree.flatten(tree_a)
+    lb, tb = jax.tree.flatten(tree_b)
+    return ta == tb and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# bucket policy
+# ---------------------------------------------------------------------------
+
+def test_bucket_for_picks_smallest_fitting_bucket():
+    assert bucket_for(1) == 16
+    assert bucket_for(16) == 16
+    assert bucket_for(17) == 24
+    assert bucket_for(100) == 128
+    assert bucket_for(512) == 512
+
+
+def test_bucket_for_beyond_largest_uses_next_pow2():
+    assert bucket_for(513) == 1024
+    assert bucket_for(2000) == 2048
+
+
+def test_bucket_for_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        bucket_for(0)
+
+
+def test_next_pow2_has_min_lanes_floor():
+    # width-1 stacks are forbidden: XLA lowers a degenerate batch-1
+    # dot_general differently from every width >= 2 (and from eager), so
+    # a width floor is what makes per-lane bits width-invariant
+    assert MIN_LANES >= 2
+    assert next_pow2(1) == MIN_LANES
+    assert next_pow2(2) == 2
+    assert next_pow2(3) == 4
+    assert next_pow2(8) == 8
+    assert next_pow2(9) == 16
+
+
+# ---------------------------------------------------------------------------
+# padding
+# ---------------------------------------------------------------------------
+
+def test_pad_geometry_shapes_and_values():
+    g = _geom(0, 14)
+    p = pad_geometry(g, 16)
+    assert p.cost.shape == (16, 16) and p.weights.shape == (16,)
+    np.testing.assert_array_equal(np.asarray(p.cost)[:14, :14],
+                                  np.asarray(g.cost))
+    assert np.all(np.asarray(p.cost)[14:, :] == 0.0)
+    np.testing.assert_array_equal(np.asarray(p.weights)[:14],
+                                  np.asarray(g.weights))
+    assert np.all(np.asarray(p.weights)[14:] == np.float32(PAD_WEIGHT))
+
+
+def test_pad_geometry_noop_at_size_and_rejects_overflow():
+    g = _geom(0, 16)
+    assert pad_geometry(g, 16) is g
+    with pytest.raises(ValueError):
+        pad_geometry(g, 12)
+
+
+def test_pad_weight_survives_float32():
+    # the PR-3 lesson: the pad weight must stay a *normal* float32 (XLA
+    # CPU flushes subnormals to zero, which re-enters log/clamp paths as
+    # full-mass garbage)
+    assert np.float32(PAD_WEIGHT) > np.finfo(np.float32).tiny
+
+
+def test_padded_solve_matches_unpadded_values():
+    prob = _problem(0, 14)
+    padded = pad_problem(prob, 16, 16)
+    out_ref = repro.solve(prob, CLEAN)
+    out_pad = repro.solve(padded, CLEAN, validate=False)
+    np.testing.assert_allclose(float(out_pad.value), float(out_ref.value),
+                               rtol=1e-4)
+    T_pad = np.asarray(out_pad.coupling_dense(16, 16))
+    T_ref = np.asarray(out_ref.coupling_dense(14, 14))
+    # the ~1e-30 pad mass perturbs float32 iterates; ten outer iterations
+    # amplify that to ~1e-4 in individual coupling entries (entries are
+    # O(1/n) ~ 0.07 here, so this is still <1% of entry scale)
+    np.testing.assert_allclose(T_pad[:14, :14], T_ref, atol=5e-4)
+    # padded rows carry ~PAD_WEIGHT of mass, invisible at float32
+    assert float(T_pad[14:, :].sum()) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# batch signatures
+# ---------------------------------------------------------------------------
+
+def test_batch_signature_groups_same_shape_and_config():
+    a = (pad_problem(_problem(0, 14), 16, 16), CLEAN, None)
+    b = (pad_problem(_problem(9, 12), 16, 16), CLEAN, None)
+    assert batch_signature(a) == batch_signature(b)
+
+
+def test_batch_signature_separates_shapes_and_solver_knobs():
+    p16 = (pad_problem(_problem(0, 14), 16, 16), CLEAN, None)
+    p24 = (pad_problem(_problem(0, 14), 24, 24), CLEAN, None)
+    assert batch_signature(p16) != batch_signature(p24)
+    other = dataclasses.replace(CLEAN, outer_iters=11)
+    assert batch_signature(p16) != batch_signature(
+        (p16[0], other, None))
+
+
+# ---------------------------------------------------------------------------
+# Geometry.content_hash
+# ---------------------------------------------------------------------------
+
+def test_content_hash_construction_path_invariant():
+    rng = np.random.default_rng(0)
+    C = np.asarray(rng.random((8, 8)), np.float32)
+    w = np.full(8, 1 / 8, np.float32)
+    h_np = Geometry(C, w).content_hash()
+    h_jnp = Geometry(jnp.asarray(C), jnp.asarray(w)).content_hash()
+    h_F = Geometry(np.asfortranarray(C), w).content_hash()
+    assert h_np == h_jnp == h_F
+
+
+def test_content_hash_from_points_matches_explicit_ctor():
+    rng = np.random.default_rng(1)
+    p = np.asarray(rng.random((9, 3)), np.float32)
+    w = np.full(9, 1 / 9, np.float32)
+    assert (Geometry.from_points(p, w).content_hash()
+            == Geometry(None, w, points=p).content_hash())
+
+
+def test_content_hash_sensitivity():
+    rng = np.random.default_rng(2)
+    C = np.asarray(rng.random((8, 8)), np.float32)
+    w = np.full(8, 1 / 8, np.float32)
+    base = Geometry(C, w).content_hash()
+    assert Geometry(C.astype(np.float64), w).content_hash() != base
+    w2 = w.copy()
+    w2[0] += np.float32(1e-6)
+    assert Geometry(C, w2, validate=False).content_hash() != base
+    C2 = C.copy()
+    C2[3, 4] += np.float32(1e-6)
+    assert Geometry(C2, w).content_hash() != base
+
+
+def test_content_hash_point_cloud_never_materializes_cost(monkeypatch):
+    rng = np.random.default_rng(3)
+    p = np.asarray(rng.random((50, 3)), np.float32)
+    g = Geometry.from_points(p, np.full(50, 1 / 50, np.float32))
+
+    def boom(self):
+        raise AssertionError("content_hash materialized the n x n cost")
+
+    monkeypatch.setattr(Geometry, "cost_matrix", property(boom))
+    assert isinstance(g.content_hash(), str)
+
+
+def test_content_hash_memoized_and_rejects_tracers():
+    g = _geom(0, 8)
+    assert g.content_hash() is g.content_hash()
+
+    def inside(c):
+        Geometry(c, jnp.ones(8) / 8, validate=False).content_hash()
+        return c
+
+    with pytest.raises(ValueError, match="concrete"):
+        jax.jit(inside)(g.cost)
+
+
+# ---------------------------------------------------------------------------
+# GeometryCache
+# ---------------------------------------------------------------------------
+
+def test_cache_counters_and_artifact_reuse():
+    cache = GeometryCache(8)
+    g = _geom(0, 14)
+    a1 = cache.padded(g, 16)
+    a2 = cache.padded(g, 16)
+    assert a1 is a2
+    assert (cache.hits, cache.misses) == (1, 1)
+    # same content, different object -> still a hit
+    g2 = Geometry(jnp.asarray(np.asarray(g.cost)), g.weights)
+    assert cache.padded(g2, 16) is a1
+    assert cache.hits == 2
+
+
+def test_cache_lru_eviction():
+    cache = GeometryCache(2)
+    gs = [_geom(s, 12) for s in range(3)]
+    for g in gs:
+        cache.padded(g, 16)
+    assert len(cache) == 2 and cache.evictions == 1
+    cache.padded(gs[0], 16)          # was evicted -> miss again
+    assert cache.misses == 4
+    stats = cache.stats()
+    assert stats["entries"] == 2 and stats["hit_rate"] == 0.0
+
+
+def test_cache_lowrank_factors_and_anchors():
+    rng = np.random.default_rng(4)
+    pts = np.asarray(rng.random((12, 2)), np.float32)
+    g = Geometry.from_points(jnp.asarray(pts),
+                             jnp.full(12, 1 / 12, jnp.float32))
+    cache = GeometryCache(8)
+    fac = cache.lowrank_factors(g)
+    np.testing.assert_allclose(np.asarray(fac.todense()),
+                               np.asarray(g.cost_matrix), atol=1e-5)
+    idx1 = cache.anchors(g, 4)
+    idx2 = GeometryCache(8).anchors(g, 4)    # fresh cache, same geometry
+    assert _bits(idx1, idx2)                 # pure function of the geometry
+    with pytest.raises(ValueError, match="point-cloud"):
+        cache.lowrank_factors(_geom(0, 8))
+
+
+def test_cache_warm_populates_all_artifacts():
+    rng = np.random.default_rng(5)
+    pts = np.asarray(rng.random((10, 2)), np.float32)
+    g = Geometry.from_points(jnp.asarray(pts),
+                             jnp.full(10, 1 / 10, jnp.float32))
+    cache = GeometryCache(8)
+    cache.warm(g, buckets=(16, 24), k=3)
+    assert len(cache) == 4 and cache.hits == 0
+    cache.warm(g, buckets=(16, 24), k=3)     # all hits now
+    assert cache.hits == 4
+
+
+# ---------------------------------------------------------------------------
+# percentiles
+# ---------------------------------------------------------------------------
+
+def test_percentiles_basic_and_empty():
+    p = percentiles(list(range(1, 101)))
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p50"] <= p["p95"] <= p["p99"] <= 100
+    empty = percentiles([])
+    assert all(np.isnan(v) for v in empty.values())
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+
+def test_server_results_match_eager_solve():
+    srv = GWServer(ServeConfig(max_batch=4, max_wait_s=60.0,
+                               on_failure="none"))
+    probs = [_problem(s, 12 + s) for s in range(3)]
+    rids = [srv.submit(p, CLEAN) for p in probs]
+    for res, prob in zip(srv.results(rids), probs):
+        ref = repro.solve(prob, CLEAN)
+        np.testing.assert_allclose(res.value, float(ref.value), rtol=1e-4)
+        m, n = prob.shape
+        np.testing.assert_allclose(np.asarray(res.coupling_dense()),
+                                   np.asarray(ref.coupling_dense(m, n)),
+                                   atol=1e-5)
+        assert res.shape == (m, n) and not res.failed
+
+
+def test_server_lifecycle_poll_and_stats():
+    srv = GWServer(ServeConfig(max_batch=8, max_wait_s=60.0,
+                               on_failure="none"))
+    rid = srv.submit(_problem(0, 14), CLEAN)
+    assert srv.poll(rid) == "queued"
+    srv.flush()
+    assert srv.poll(rid) in ("running", "done")
+    res = srv.result(rid)
+    assert srv.poll(rid) == "done"
+    assert res is srv.result(rid)            # idempotent
+    stats = srv.stats()
+    assert stats["n_completed"] == 1 and stats["n_batches"] == 1
+    assert stats["mean_batch_lanes"] >= MIN_LANES   # filler lane added
+    assert np.isfinite(stats["latency_p99_ms"])
+    with pytest.raises(KeyError):
+        srv.result(999)
+
+
+def test_server_eager_key_validation():
+    srv = GWServer()
+    with pytest.raises(ValueError, match="PRNG key"):
+        srv.submit(_problem(0, 14), "spar_gw")
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(on_failure="retry")
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=0)
+
+
+def test_server_multi_bucket_routing():
+    srv = GWServer(ServeConfig(max_batch=8, max_wait_s=60.0,
+                               on_failure="none"))
+    rids = [srv.submit(_problem(s, n), CLEAN)
+            for s, n in enumerate((12, 20, 14, 28))]
+    res = srv.results(rids)
+    assert [r.padded_shape for r in res] == [(16, 16), (24, 24), (16, 16),
+                                             (32, 32)]
+    # 3 buckets: (16,16) holds two requests, the others one + filler
+    assert srv.stats()["n_batches"] == 3
+
+
+# ---------------------------------------------------------------------------
+# lane isolation: the serving-boundary acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_poisoned_lane_isolated_and_mates_bitwise_solo():
+    """One FaultSpec-poisoned request in a bucket must (a) come back
+    DIVERGED itself and (b) leave every bucket-mate bitwise identical to
+    the mate's solo (eager, unbatched) solve."""
+    seeds = [0, 1, 2, 5]
+    probs = [_problem(s, 14) for s in seeds]
+    solvers = [CLEAN, POISONED, CLEAN, CLEAN]
+    srv = GWServer(ServeConfig(max_batch=4, max_wait_s=60.0,
+                               on_failure="none"))
+    rids = [srv.submit(p, s) for p, s in zip(probs, solvers)]
+    res = srv.results(rids)
+
+    assert res[1].status_name == "DIVERGED" and res[1].failed
+    assert srv.stats()["n_batches"] == 1     # one bucket held all four
+
+    # solo references: one fresh server, one request per batch (submit ->
+    # result immediately, so nothing shares a bucket)
+    solo_srv = GWServer(ServeConfig(max_batch=4, max_wait_s=60.0,
+                                    on_failure="none"))
+    for i in (0, 2, 3):
+        solo = solo_srv.result(solo_srv.submit(probs[i], CLEAN))
+        assert not res[i].failed
+        assert _bits(res[i].output.value, solo.output.value)
+        assert _bits(res[i].output.coupling_dense(16, 16),
+                     solo.output.coupling_dense(16, 16))
+
+
+def test_filler_lanes_do_not_change_request_bits():
+    # lane 1 holding a disarmed filler replica vs lane 1 holding a real
+    # different request: lane 0's bits must not change (even when lane 0
+    # itself is the poisoned, diverging one)
+    prob = _problem(3, 13)
+    srv_solo = GWServer(ServeConfig(max_batch=8, max_wait_s=60.0,
+                                    on_failure="none"))
+    solo = srv_solo.result(srv_solo.submit(prob, POISONED))
+    srv_pair = GWServer(ServeConfig(max_batch=2, max_wait_s=60.0,
+                                    on_failure="none"))
+    rid0 = srv_pair.submit(prob, POISONED)
+    rid1 = srv_pair.submit(_problem(8, 15), CLEAN)
+    paired = srv_pair.results([rid0, rid1])[0]
+    assert solo.status_name == paired.status_name == "DIVERGED"
+    assert _bits(solo.output.value, paired.output.value)
+    assert _bits(solo.output.coupling, paired.output.coupling)
+
+
+# ---------------------------------------------------------------------------
+# per-request fallback
+# ---------------------------------------------------------------------------
+
+def test_poisoned_request_falls_back_mates_untouched():
+    persistent = dataclasses.replace(
+        BASE, max_rescues=0,
+        fault=FaultSpec(at_iter=1, kind="nan", persistent=True))
+    probs = [_problem(s, 14) for s in (0, 1, 2, 5)]
+    solvers = [CLEAN, persistent, CLEAN, CLEAN]
+    srv = GWServer(ServeConfig(max_batch=4, max_wait_s=60.0,
+                               on_failure="fallback"))
+    rids = [srv.submit(p, s, key=jax.random.PRNGKey(100 + i))
+            for i, (p, s) in enumerate(zip(probs, solvers))]
+    res = srv.results(rids)
+
+    # the poisoned request recovered through the ladder, at its own shape
+    assert res[1].failed and res[1].fell_back
+    assert int(np.asarray(res[1].status.code)) < STALLED
+    assert np.isfinite(res[1].value)
+    assert res[1].coupling_dense().shape == (14, 14)
+    assert srv.stats()["n_fallbacks"] == 1
+
+    # mates stayed on the batched path, bitwise equal to solo
+    for i in (0, 2, 3):
+        assert not res[i].fell_back
+        padded = pad_problem(probs[i], 16, 16)
+        ref = CLEAN.run(padded, jax.random.PRNGKey(100 + i))
+        assert _bits(res[i].output.value, ref.value)
+
+
+def test_keyless_dense_fallback_returns_batched_output():
+    # with no PRNG key the ladder has no key-free rungs besides the
+    # primary -> fallback cannot recover; the batched DIVERGED output is
+    # returned honestly (failed=True, fell_back=False)
+    persistent = dataclasses.replace(
+        BASE, max_rescues=0,
+        fault=FaultSpec(at_iter=1, kind="nan", persistent=True))
+    srv = GWServer(ServeConfig(max_batch=2, max_wait_s=60.0,
+                               on_failure="fallback"))
+    res = srv.result(srv.submit(_problem(0, 14), persistent))
+    assert res.failed and not res.fell_back
+    assert res.status_name == "DIVERGED"
