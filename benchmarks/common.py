@@ -12,7 +12,7 @@ import numpy as np
 # shared percentile helper (p50/p95/p99) — single definition for every
 # BENCH_*.json writer, so serve-layer and solver rows report the same
 # tail statistics
-from repro.serve.metrics import percentiles  # noqa: F401  (re-export)
+from repro.obs import percentiles, span  # noqa: F401  (re-export)
 
 FULL = bool(os.environ.get("REPRO_BENCH_FULL"))
 
@@ -59,8 +59,11 @@ def timed_samples(fn, *args, reps: int = 1, warmup: bool = True):
     untimed call first so compilation never lands in the samples.
     """
     if warmup:
-        out = fn(*args)
-        jax.block_until_ready(out)
+        # the warmup call is where jit compilation lands; the span makes
+        # compile time visible in obs.report() without polluting samples
+        with span("bench.compile"):
+            out = fn(*args)
+            jax.block_until_ready(out)
     samples = []
     for _ in range(reps):
         t0 = time.time()
@@ -104,13 +107,19 @@ def bench_solver(name: str, n: int = 120, loss: str = "l2", reps: int = 3,
     if solver_kw:
         solver = dataclasses.replace(solver, **solver_kw)
     key = jax.random.PRNGKey(0)
-    samples, out = timed_samples(lambda: repro.solve(problem, solver, key=key),
-                                 reps=reps)
+    fn = lambda: repro.solve(problem, solver, key=key)  # noqa: E731
+    # explicit warmup under a span so the compile/steady split survives
+    # into obs.report() and the BENCH json rows
+    with span("bench.compile", solver=name) as sp:
+        jax.block_until_ready(fn())
+    samples, out = timed_samples(fn, reps=reps, warmup=False)
+    compile_s = sp["duration_s"]
     sec = sum(samples) / len(samples)
     pcts = percentiles(samples)
     status = out.status.describe() if out.status is not None else "UNKNOWN"
     record(f"solve/{dataset}/{loss}/n{n}/{name}", sec * 1e6,
            f"value={float(out.value):.5f};n_iters={int(out.n_iters)};"
            f"converged={bool(out.converged)};status={status};"
-           f"p50_us={pcts['p50'] * 1e6:.1f};p99_us={pcts['p99'] * 1e6:.1f}")
-    return sec, out, pcts
+           f"p50_us={pcts['p50'] * 1e6:.1f};p99_us={pcts['p99'] * 1e6:.1f};"
+           f"compile_s={compile_s:.3f}")
+    return sec, out, pcts, compile_s

@@ -1,0 +1,130 @@
+"""Observability smoke — the CI obs-smoke job's assertion script.
+
+Exercises every telemetry surface end to end and asserts on it:
+
+1. one **traced solve per registered family** — the trace exists, its
+   recorded prefix is finite where the contract says so, and its length
+   equals ``n_iters``;
+2. ``obs.report()`` after a traced solve — one ``json.dumps``-clean
+   document with the trace, the span breakdown, and the registry
+   snapshot;
+3. ``bench_serve --quick`` **with the Prometheus exporter live** — the
+   serve rows stay finite, a real scrape of ``/metrics`` returns valid
+   exposition text (``validate_exposition``), and the registry snapshot
+   round-trips through strict JSON;
+4. trace=off stays **bitwise identical** to the traced coupling.
+
+Run: ``PYTHONPATH=src python benchmarks/obs_smoke.py``
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro import obs
+
+N = 24
+
+
+def _problem(seed=0, n=N):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+
+    def cloud(key, scale):
+        x = jax.random.normal(key, (n, 2)) * scale
+        return jnp.sqrt(jnp.sum((x[:, None] - x[None, :]) ** 2, -1))
+
+    a = jnp.ones(n) / n
+    return repro.QuadraticProblem(repro.Geometry(cloud(kx, 1.0), a),
+                                  repro.Geometry(cloud(ky, 1.2), a),
+                                  loss="l2")
+
+
+def traced_solve_per_family() -> None:
+    problem = _problem()
+    for name in repro.available_solvers():
+        solver = dataclasses.replace(
+            repro.get_solver(name).default_config(N), trace=True)
+        key = (jax.random.PRNGKey(7)
+               if getattr(type(solver), "requires_key", False) else None)
+        out = repro.solve(problem, solver, key=key, validate=False)
+        assert out.trace is not None, f"{name}: no trace with trace=True"
+        n = int(out.n_iters)
+        nv = obs.n_valid(out.trace)
+        assert nv == n > 0, f"{name}: n_valid {nv} != n_iters {n}"
+        err = np.asarray(out.trace.err)[:n]
+        assert np.all(np.isfinite(err[~np.isnan(err)])), \
+            f"{name}: inf in the err trace"
+        doc = obs.trace_to_dict(out.trace, n)
+        json.dumps(doc)
+        print(f"obs_smoke/trace/{name},0.0,"
+              f"n_iters={n};final_err={doc['err'][-1]}")
+
+
+def report_roundtrip() -> None:
+    obs.clear_spans()
+    problem = _problem(seed=3)
+    solver = repro.DenseGWSolver(tol=1e-6, inner_tol=1e-8, outer_iters=10,
+                                 trace=True)
+    out = repro.solve(problem, solver, on_failure="raise")
+    doc = obs.report(out, solver="dense_gw")
+    assert set(doc) == {"solve", "spans", "breakdown", "metrics"}
+    assert doc["solve"]["trace"] is not None
+    assert any(r["name"] == "solve.dispatch" for r in doc["spans"])
+    total = doc["breakdown"]["compile_s"] + doc["breakdown"]["dispatch_s"]
+    assert total > 0, "lifecycle breakdown recorded no dispatch time"
+    payload = json.dumps(doc)
+    assert json.loads(payload)["solve"]["n_iters"] == doc["solve"]["n_iters"]
+    print(f"obs_smoke/report,0.0,spans={len(doc['spans'])};"
+          f"compile_s={doc['breakdown']['compile_s']:.3f}")
+
+
+def trace_off_bitwise() -> None:
+    problem = _problem(seed=5)
+    base = repro.DenseGWSolver(outer_iters=6, tol=0.0, inner_tol=1e-8)
+    out_off = repro.solve(problem, base, validate=False)
+    out_on = repro.solve(problem, dataclasses.replace(base, trace=True),
+                         validate=False)
+    assert out_off.trace is None
+    np.testing.assert_array_equal(np.asarray(out_off.coupling_dense(N, N)),
+                                  np.asarray(out_on.coupling_dense(N, N)))
+    print("obs_smoke/bitwise_off,0.0,ok")
+
+
+def serve_with_exporter() -> None:
+    from benchmarks import bench_serve
+    http = obs.serve_metrics_http(0)          # ephemeral port
+    try:
+        rows = bench_serve.main(quick=True, json_path="")
+        for row in rows:
+            assert np.isfinite(row["p99_ms"]), f"non-finite p99: {row}"
+        host, port = http.server_address[:2]
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/metrics", timeout=10) as resp:
+            text = resp.read().decode()
+        n_samples = obs.validate_exposition(text)
+        assert n_samples > 0
+        assert "repro_serve_requests_total" in text
+        snap = json.loads(json.dumps(obs.registry().snapshot()))
+        assert "repro_serve_latency_seconds" in snap["metrics"]
+        print(f"obs_smoke/serve_exporter,0.0,samples={n_samples}")
+    finally:
+        http.shutdown()
+
+
+def main() -> None:
+    traced_solve_per_family()
+    report_roundtrip()
+    trace_off_bitwise()
+    serve_with_exporter()
+    print("obs_smoke/ok,0.0,all checks passed")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

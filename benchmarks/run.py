@@ -43,7 +43,8 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
         # a failing solver records a failure row and the suite moves on —
         # one broken rung must not abort the whole benchmark run
         try:
-            sec, out, pcts = bench_solver(name, n=n, loss=loss, reps=reps)
+            sec, out, pcts, compile_s = bench_solver(name, n=n, loss=loss,
+                                                     reps=reps)
         except Exception as exc:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
@@ -64,6 +65,8 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
             "loss": loss,
             "n": n,
             "wall_time_s": round(sec, 6),
+            "compile_s": round(compile_s, 6),
+            "steady_s": round(sec, 6),
             "p50_s": round(pcts["p50"], 6),
             "p95_s": round(pcts["p95"], 6),
             "p99_s": round(pcts["p99"], 6),

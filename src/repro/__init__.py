@@ -6,6 +6,7 @@ solver config (or none — the solver is auto-selected from the problem
 structure). The per-variant functions in ``repro.core`` (``spar_gw``,
 ``gw_dense``, ...) remain available as deprecation shims over this layer.
 """
+from repro import obs
 from repro.api import (
     DenseGWSolver,
     Geometry,
@@ -27,6 +28,7 @@ from repro.api import (
 )
 
 __all__ = [
+    "obs",
     "Geometry",
     "QuadraticProblem",
     "GWOutput",

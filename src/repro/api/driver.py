@@ -49,11 +49,13 @@ def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
               coupling)
 
     Extra keyword arguments (``scaled_step``, ``max_rescues``,
-    ``rescue_factor``, ``mass_floor``, ``stall_err``, ``fault``) are
-    forwarded to :func:`repro.health.loop.health_loop`.
+    ``rescue_factor``, ``mass_floor``, ``stall_err``, ``fault``,
+    ``trace``, ``obj_fn``) are forwarded to
+    :func:`repro.health.loop.health_loop`.
 
-    Returns a ``LoopResult(iterate, errors, n_iters, converged, status)``
-    with ``errors`` of static shape (max_iters,), NaN-padded past
-    ``n_iters`` and at rescued/diverged iterations.
+    Returns a ``LoopResult(iterate, errors, n_iters, converged, status,
+    trace)`` with ``errors`` of static shape (max_iters,), NaN-padded past
+    ``n_iters`` and at rescued/diverged iterations; ``trace`` is None
+    unless ``trace=True`` was passed.
     """
     return health_loop(step_fn, err_fn, T0, max_iters, tol, **health_kw)

@@ -149,6 +149,10 @@ class GWOutput:
                 (CONVERGED / MAXITER / STALLED / DIVERGED, iteration of
                 first failure, last finite error, rescues consumed);
                 ``None`` only for outputs built by pre-health code
+    trace     — per-iteration :class:`~repro.obs.trace.ConvergenceTrace`
+                buffers (err / objective / delta / mass / rescue scale /
+                rescue events) when the solver ran with ``trace=True``;
+                ``None`` otherwise — tracing off adds zero pytree leaves
     """
     value: Any
     coupling: Any
@@ -156,6 +160,7 @@ class GWOutput:
     converged: Any
     n_iters: Any
     status: Optional[SolveStatus] = None
+    trace: Optional[Any] = None
 
     def coupling_dense(self, m: int, n: int):
         """The coupling as a dense (m, n) matrix, whatever its storage."""
@@ -167,4 +172,4 @@ class GWOutput:
 register_pytree_dataclass(
     GWOutput,
     data_fields=("value", "coupling", "errors", "converged", "n_iters",
-                 "status"))
+                 "status", "trace"))

@@ -27,6 +27,9 @@ from repro.api.pytree import is_concrete
 from repro.api.solvers import get_solver
 from repro.health.fallback import fallback_chain
 from repro.health.status import DIVERGED, STALLED, SolveDivergedError
+from repro.obs.registry import registry
+from repro.obs.report import note_solve
+from repro.obs.span import span
 
 # auto-selection size thresholds (max(m, n)); see select_solver
 AUTO_DENSE_MAX = 256
@@ -91,6 +94,49 @@ def _solve_jit(problem, solver, key):
     return solver.run(problem, key)
 
 
+def _jit_cache_size() -> int:
+    """Entry count of ``_solve_jit``'s executable cache (-1 if the JAX
+    version doesn't expose it) — a dispatch that grows it compiled."""
+    try:
+        return _solve_jit._cache_size()
+    except Exception:  # noqa: BLE001 — observability only
+        return -1
+
+
+def _dispatch(problem, solver, key, solver_name: str):
+    """One jitted dispatch under a ``solve.dispatch`` span, marking the
+    calls that triggered an XLA compilation (``compiled=True``) so the
+    lifecycle breakdown can split compile_s from steady dispatch_s."""
+    before = _jit_cache_size()
+    with span("solve.dispatch", solver=solver_name) as sp:
+        out = _solve_jit(problem, solver, key)
+        sp["compiled"] = bool(before >= 0 and _jit_cache_size() > before)
+    return out
+
+
+def _record_outcome(solver_name: str, out, fell_back: bool = False) -> None:
+    """Registry counters for a solve whose status is already concrete.
+
+    Only called from paths that have inspected the output on the host
+    (``on_failure != 'none'``) — counting earlier would force a device
+    sync and defeat async dispatch.
+    """
+    try:
+        reg = registry()
+        status_name = ("UNKNOWN" if out.status is None
+                       else out.status.describe())
+        reg.counter("repro_solves_total", "completed solves by status",
+                    solver=solver_name, status=status_name).inc()
+        if out.status is not None:
+            reg.counter("repro_rescues_total",
+                        "in-jit eps-rescue restarts consumed",
+                        solver=solver_name).inc(
+                            float(np.sum(np.asarray(out.status.n_rescues))))
+        note_solve(out, solver=solver_name)
+    except Exception:  # noqa: BLE001 — telemetry must never break a solve
+        pass
+
+
 def _solve_failed(out) -> bool:
     """Host-side failure predicate: DIVERGED/STALLED status (any lane) or
     a non-finite value."""
@@ -140,41 +186,66 @@ def solve(problem: QuadraticProblem,
         raise ValueError(
             f"on_failure must be 'none', 'raise' or 'fallback', got "
             f"{on_failure!r}")
-    if solver is None:
-        solver = select_solver(problem)
-    elif isinstance(solver, str):
-        solver = get_solver(solver).default_config(max(problem.shape))
-    if key is None and getattr(type(solver), "requires_key", False):
-        raise ValueError(
-            f"{type(solver).__name__} needs a PRNG key (it draws a random "
-            f"support / anchors / init): call repro.solve(problem, solver, "
-            f"key=jax.random.PRNGKey(seed))")
-    if validate and not getattr(problem, "_validated", False):
-        problem.check()
-    out = _solve_jit(problem, solver, key)
-    if on_failure == "none":
+    with span("solve", on_failure=on_failure) as sp_solve:
+        if solver is None:
+            with span("solve.select"):
+                solver = select_solver(problem)
+        elif isinstance(solver, str):
+            solver = get_solver(solver).default_config(max(problem.shape))
+        primary_name = getattr(type(solver), "name", type(solver).__name__)
+        sp_solve["solver"] = primary_name
+        if key is None and getattr(type(solver), "requires_key", False):
+            raise ValueError(
+                f"{type(solver).__name__} needs a PRNG key (it draws a "
+                f"random support / anchors / init): call repro.solve("
+                f"problem, solver, key=jax.random.PRNGKey(seed))")
+        if validate and not getattr(problem, "_validated", False):
+            with span("solve.validate"):
+                problem.check()
+        out = _dispatch(problem, solver, key, primary_name)
+        if on_failure == "none":
+            # async contract: the output may still be device futures —
+            # no host-side status inspection or counting here
+            return out
+        if not (is_concrete(out.value)
+                and (out.status is None or is_concrete(out.status.code))):
+            raise ValueError(
+                "on_failure='raise'/'fallback' inspects concrete solve "
+                "results and cannot run under jit/vmap tracing; call solve "
+                "eagerly or use on_failure='none' and handle out.status "
+                "downstream")
+        failed = _solve_failed(out)
+        _record_outcome(primary_name, out)
+        if not failed:
+            return out
+        registry().counter("repro_solve_failures_total",
+                           "solves unhealthy after in-jit rescue",
+                           solver=primary_name).inc()
+        if on_failure == "raise":
+            raise SolveDivergedError(
+                f"{primary_name} failed: status="
+                f"{out.status.describe() if out.status is not None else None}"
+                f", value={np.asarray(out.value)}", output=out)
+        # fallback: deterministic ladder walk — attempt k re-keys with
+        # fold_in(key, k), so recovered solves are bitwise reproducible
+        with span("solve.fallback", solver=primary_name) as sp_fb:
+            sp_fb["recovered"] = False
+            for attempt, cand in enumerate(
+                    fallback_chain(problem, exclude=(primary_name,),
+                                   key_available=key is not None), start=1):
+                cand_name = getattr(type(cand), "name", type(cand).__name__)
+                registry().counter("repro_fallback_attempts_total",
+                                   "solver-ladder rungs tried",
+                                   solver=cand_name).inc()
+                cand_key = (None if key is None
+                            else jax.random.fold_in(key, attempt))
+                cand_out = _dispatch(problem, cand, cand_key, cand_name)
+                if not _solve_failed(cand_out):
+                    sp_fb["recovered"] = True
+                    sp_fb["recovered_by"] = cand_name
+                    registry().counter("repro_fallback_recoveries_total",
+                                       "failed solves rescued by the ladder",
+                                       solver=cand_name).inc()
+                    _record_outcome(cand_name, cand_out, fell_back=True)
+                    return cand_out
         return out
-    if not (is_concrete(out.value)
-            and (out.status is None or is_concrete(out.status.code))):
-        raise ValueError(
-            "on_failure='raise'/'fallback' inspects concrete solve results "
-            "and cannot run under jit/vmap tracing; call solve eagerly or "
-            "use on_failure='none' and handle out.status downstream")
-    if not _solve_failed(out):
-        return out
-    primary_name = getattr(type(solver), "name", type(solver).__name__)
-    if on_failure == "raise":
-        raise SolveDivergedError(
-            f"{primary_name} failed: status="
-            f"{out.status.describe() if out.status is not None else None}, "
-            f"value={np.asarray(out.value)}", output=out)
-    # fallback: deterministic ladder walk — attempt k re-keys with
-    # fold_in(key, k), so recovered solves are bitwise reproducible
-    for attempt, cand in enumerate(
-            fallback_chain(problem, exclude=(primary_name,),
-                           key_available=key is not None), start=1):
-        cand_key = None if key is None else jax.random.fold_in(key, attempt)
-        cand_out = _solve_jit(problem, cand, cand_key)
-        if not _solve_failed(cand_out):
-            return cand_out
-    return out

@@ -145,7 +145,8 @@ def _require_key(key, solver_name: str):
 def _health_kw(solver):
     """Driver keywords wiring a config's rescue/fault knobs into pga_loop."""
     return dict(scaled_step=True, max_rescues=solver.max_rescues,
-                rescue_factor=solver.rescue_factor, fault=solver.fault)
+                rescue_factor=solver.rescue_factor, fault=solver.fault,
+                trace=solver.trace)
 
 
 # ---------------------------------------------------------------------------
@@ -163,7 +164,9 @@ class SparGWSolver:
     O(s²) cost-assembly backend (kernels/spar_cost). ``max_rescues`` /
     ``rescue_factor`` bound the driver's in-jit ε-rescue restarts on
     detected divergence (ε-doubling from the last healthy iterate);
-    ``fault`` is the chaos-testing hook (health/faults.py).
+    ``fault`` is the chaos-testing hook (health/faults.py); ``trace``
+    records per-iteration convergence buffers onto ``output.trace``
+    (obs/trace.py — off by default, zero cost and zero leaves when off).
     """
     s: int = 0
     reg: str = "prox"
@@ -179,6 +182,7 @@ class SparGWSolver:
     max_rescues: int = 2
     rescue_factor: float = 2.0
     fault: Any = None
+    trace: bool = False
 
     requires_key = True
 
@@ -220,9 +224,16 @@ class SparGWSolver:
                        inner_tol=self.inner_tol, reg=self.reg,
                        stable=self.stable, alpha=alpha, lin=lin)
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, errors, n_iters, converged, status = pga_loop(
+
+        def obj_fn(t):          # the step-8 plug-in objective, per iteration
+            quad_t = jnp.sum(t * cost_fn(t))
+            if fused:
+                return alpha * quad_t + (1.0 - alpha) * jnp.sum(lin * t)
+            return quad_t
+
+        T, errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, T0, self.outer_iters, self.tol,
-            **_health_kw(self))
+            obj_fn=obj_fn, **_health_kw(self))
         # Step 8: plug-in objective on the sparse support, O(s²).
         quad = jnp.sum(T * cost_fn(T))
         if fused:
@@ -231,7 +242,7 @@ class SparGWSolver:
             value = quad
         return GWOutput(value=value, coupling=SparseCoupling(rows, cols, T),
                         errors=errors, converged=converged, n_iters=n_iters,
-                        status=status)
+                        status=status, trace=trace)
 
     def _run_unbalanced(self, problem, key) -> GWOutput:
         Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
@@ -273,9 +284,17 @@ class SparGWSolver:
             return jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
 
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, errors, n_iters, converged, status = pga_loop(
+
+        def obj_fn(t):          # Alg. 3 step-11 UGW objective, per iteration
+            mu_t = jax.ops.segment_sum(t, rows, num_segments=m)
+            nu_t = jax.ops.segment_sum(t, cols, num_segments=n)
+            return (jnp.sum(t * cost_fn(t))
+                    + lam * quadratic_kl(mu_t, a)
+                    + lam * quadratic_kl(nu_t, b))
+
+        T, errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, T0, self.outer_iters, self.tol,
-            **_health_kw(self))
+            obj_fn=obj_fn, **_health_kw(self))
         # Alg. 3 step 11: UGW objective on the sparse coupling
         mu = jax.ops.segment_sum(T, rows, num_segments=m)
         nu = jax.ops.segment_sum(T, cols, num_segments=n)
@@ -283,7 +302,7 @@ class SparGWSolver:
                  + lam * quadratic_kl(mu, a) + lam * quadratic_kl(nu, b))
         return GWOutput(value=value, coupling=SparseCoupling(rows, cols, T),
                         errors=errors, converged=converged, n_iters=n_iters,
-                        status=status)
+                        status=status, trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +327,7 @@ class DenseGWSolver:
     max_rescues: int = 2
     rescue_factor: float = 2.0
     fault: Any = None
+    trace: bool = False
 
     requires_key = False
 
@@ -351,16 +371,24 @@ class DenseGWSolver:
             return sinkhorn(a, b, K, self.inner_iters, tol=self.inner_tol)
 
         err_fn = partial(_dense_marginal_err, a=a, b=b)
-        T, errors, n_iters, converged, status = pga_loop(
+
+        def obj_fn(t):
+            quad_t = gw_objective(Cx, Cy, t, loss)
+            if fused:
+                return alpha * quad_t + (1 - alpha) * jnp.sum(M * t)
+            return quad_t
+
+        T, errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, T0, self.outer_iters, self.tol,
-            **_health_kw(self))
+            obj_fn=obj_fn, **_health_kw(self))
         quad = gw_objective(Cx, Cy, T, loss)
         if fused:
             value = alpha * quad + (1 - alpha) * jnp.sum(M * T)
         else:
             value = quad
         return GWOutput(value=value, coupling=T, errors=errors,
-                        converged=converged, n_iters=n_iters, status=status)
+                        converged=converged, n_iters=n_iters, status=status,
+                        trace=trace)
 
     def _run_unbalanced(self, problem) -> GWOutput:
         Cx, a = problem.geom_x.cost_matrix, problem.geom_x.weights
@@ -381,14 +409,21 @@ class DenseGWSolver:
             return jnp.sqrt(mT / jnp.maximum(jnp.sum(T_new), 1e-30)) * T_new
 
         err_fn = partial(_dense_marginal_err, a=a, b=b)
-        T, errors, n_iters, converged, status = pga_loop(
+
+        def obj_fn(t):
+            return (jnp.sum(t * dense_cost(Cx, Cy, t, loss))
+                    + lam * quadratic_kl(t.sum(1), a)
+                    + lam * quadratic_kl(t.sum(0), b))
+
+        T, errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, T0, self.outer_iters, self.tol,
-            **_health_kw(self))
+            obj_fn=obj_fn, **_health_kw(self))
         value = (jnp.sum(T * dense_cost(Cx, Cy, T, loss))
                  + lam * quadratic_kl(T.sum(1), a)
                  + lam * quadratic_kl(T.sum(0), b))
         return GWOutput(value=value, coupling=T, errors=errors,
-                        converged=converged, n_iters=n_iters, status=status)
+                        converged=converged, n_iters=n_iters, status=status,
+                        trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -418,6 +453,7 @@ class GridGWSolver:
     max_rescues: int = 2
     rescue_factor: float = 2.0
     fault: Any = None
+    trace: bool = False
 
     requires_key = True
 
@@ -469,12 +505,16 @@ class GridGWSolver:
             return sinkhorn(aR, bC, K, self.inner_iters, tol=self.inner_tol)
 
         err_fn = partial(_dense_marginal_err, a=aR, b=bC)
-        T, errors, n_iters, converged, status = pga_loop(
+
+        def obj_fn(t):
+            return jnp.sum(t * grid_cost(CxR, CyC, t, loss, self.use_kernel))
+
+        T, errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, T0, self.outer_iters, self.tol,
-            **_health_kw(self))
+            obj_fn=obj_fn, **_health_kw(self))
         value = jnp.sum(T * grid_cost(CxR, CyC, T, loss, self.use_kernel))
         return GWOutput(value=value, coupling=GridCoupling(R, C, T),
                         errors=errors, converged=converged, n_iters=n_iters,
-                        status=status)
+                        status=status, trace=trace)
 
 

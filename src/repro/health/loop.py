@@ -49,6 +49,7 @@ from repro.health.status import (
     STALLED,
     SolveStatus,
 )
+from repro.obs.trace import ConvergenceTrace, empty_trace
 
 _TINY = 1e-30
 
@@ -76,6 +77,8 @@ class LoopResult(NamedTuple):
     n_iters: Any        # iterations consumed (including rescue attempts)
     converged: Any      # tolerance met (bool; False under tol=0)
     status: SolveStatus
+    trace: Optional[ConvergenceTrace] = None   # per-iteration buffers
+                                               # (None unless trace=True)
 
 
 def _tree_l1(tree):
@@ -96,7 +99,9 @@ def health_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
                 mass_floor: float = DEFAULT_MASS_FLOOR,
                 mass_ceil: float = DEFAULT_MASS_CEIL,
                 stall_err: float = DEFAULT_STALL_ERR,
-                fault: Optional[Any] = None) -> LoopResult:
+                fault: Optional[Any] = None,
+                trace: bool = False,
+                obj_fn: Optional[Callable] = None) -> LoopResult:
     """Iterate ``T <- step_fn(T[, scale])`` with health instrumentation.
 
     step_fn     — one outer solver step; with ``scaled_step`` it receives
@@ -108,20 +113,33 @@ def health_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
                   out (fixed budget, ``converged`` stays False)
     max_rescues — divergence restarts before a lane dies DIVERGED
     fault       — optional FaultSpec (see health/faults.py)
+    trace       — static: carry :class:`~repro.obs.trace.ConvergenceTrace`
+                  buffers through the loop and return them on the result;
+                  when False (default) the loop body is the exact pre-obs
+                  computation and ``result.trace`` is None (zero leaves)
+    obj_fn      — optional per-iteration objective ``obj_fn(T_new) ->
+                  scalar``, recorded in the trace; only evaluated when
+                  ``trace=True`` (otherwise ignored)
 
     All keyword arguments except ``fault.at_iter`` are static.
     """
     errs0 = jnp.full((max_iters,), jnp.nan, jnp.float32)
     if max_iters <= 0:
         return LoopResult(T0, errs0, jnp.int32(0), jnp.bool_(False),
-                          SolveStatus.healthy(MAXITER))
+                          SolveStatus.healthy(MAXITER),
+                          empty_trace(0) if trace else None)
 
     def cond(state):
-        i, *_, conv, dead = state
+        # indexed (not star-unpacked): the trace buffers, when carried,
+        # ride at the end of the state tuple
+        i, conv, dead = state[0], state[6], state[7]
         return (i < max_iters) & jnp.logical_not(conv | dead)
 
     def body(state):
-        i, T, errs, last_err, fail_iter, n_rescues, conv, dead = state
+        if trace:
+            i, T, errs, last_err, fail_iter, n_rescues, conv, dead, tr = state
+        else:
+            i, T, errs, last_err, fail_iter, n_rescues, conv, dead = state
         done = conv | dead
         T_in = fault.apply(T, i) if fault is not None and \
             fault.site == "cost" else T
@@ -139,7 +157,9 @@ def health_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
         # still-healthy T with escalated scale) or kills the lane
         can_rescue = n_rescues < max_rescues
         fail_iter = jnp.where(bad & (fail_iter < 0), i, fail_iter)
-        n_rescues = jnp.where(bad & can_rescue, n_rescues + 1, n_rescues)
+        rescued_now = bad & can_rescue
+        n_rescues_in = n_rescues          # pre-update: the scale in effect
+        n_rescues = jnp.where(rescued_now, n_rescues + 1, n_rescues)
         dead = dead | (bad & jnp.logical_not(can_rescue))
         # only healthy, not-yet-done lanes advance their iterate/diagnostics
         adv = healthy & jnp.logical_not(done)
@@ -149,16 +169,49 @@ def health_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
         T_out = jax.tree.map(lambda new, old: jnp.where(adv, new, old),
                              T_new, T)
         i_out = jnp.where(done, i, i + 1)   # rescues consume budget too
-        if tol > 0:                  # tol is static: predicate compiled out
+        delta = None
+        if trace or tol > 0:
             num = _tree_l1(jax.tree.map(lambda new, old: new - old, T_new, T))
             delta = num / jnp.maximum(_tree_l1(T), _TINY)
+        if tol > 0:                  # tol is static: predicate compiled out
             conv = conv | (adv & (delta <= tol))
+        if trace:
+            notdone = jnp.logical_not(done)
+
+            def _wr(buf, val, mask):
+                return jnp.where(mask,
+                                 buf.at[i].set(val.astype(jnp.float32)), buf)
+
+            # err/objective/delta describe an *accepted* step (mask adv);
+            # mass/scale/rescued describe the attempt itself (mask ~done),
+            # so rescue iterations keep their forensic record: the
+            # exploded mass, the scale that failed, the rescue event
+            obj = (obj_fn(T_new).astype(jnp.float32)
+                   if obj_fn is not None else None)
+            scale_now = jnp.float32(rescue_factor) ** n_rescues_in
+            tr = ConvergenceTrace(
+                err=_wr(tr.err, err, adv),
+                objective=(_wr(tr.objective, obj, adv)
+                           if obj is not None else tr.objective),
+                delta=_wr(tr.delta, delta, adv),
+                mass=_wr(tr.mass, l1, notdone),
+                scale=_wr(tr.scale, scale_now, notdone),
+                rescued=_wr(tr.rescued,
+                            jnp.where(rescued_now, jnp.float32(1),
+                                      jnp.float32(0)), notdone),
+            )
+            return (i_out, T_out, errs, last_err, fail_iter, n_rescues,
+                    conv, dead, tr)
         return i_out, T_out, errs, last_err, fail_iter, n_rescues, conv, dead
 
     state0 = (jnp.int32(0), T0, errs0, jnp.float32(jnp.nan), jnp.int32(-1),
               jnp.int32(0), jnp.bool_(False), jnp.bool_(False))
+    if trace:
+        state0 = state0 + (empty_trace(max_iters),)
+    final = lax.while_loop(cond, body, state0)
     (n_iters, T, errors, last_err, fail_iter, n_rescues, conv,
-     dead) = lax.while_loop(cond, body, state0)
+     dead) = final[:8]
+    tr_out = final[8] if trace else None
 
     stalled = conv & (last_err > stall_err)
     code = jnp.where(dead, DIVERGED,
@@ -167,4 +220,4 @@ def health_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
                                          MAXITER))).astype(jnp.int32)
     status = SolveStatus(code=code, fail_iter=fail_iter, last_err=last_err,
                          n_rescues=n_rescues)
-    return LoopResult(T, errors, n_iters, conv, status)
+    return LoopResult(T, errors, n_iters, conv, status, tr_out)

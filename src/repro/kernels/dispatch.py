@@ -34,6 +34,8 @@ from typing import Callable, Iterable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.registry import registry as _obs_registry
+
 _TRUTHY = {"1", "true", "yes", "on"}
 _FALSY = {"0", "false", "no", "off"}
 
@@ -118,16 +120,25 @@ def block_size(family: str, override: Optional[int] = None,
     cache (populated by :func:`autotune`) > registry default. ``cap``
     clamps from above (e.g. to the problem size) while keeping ≥ 1.
     """
-    bs = override
+    bs, source = override, "override"
     if bs is None:
         env = os.environ.get(f"REPRO_BLOCK_{family.upper()}")
         if env:
-            bs = int(env)
+            bs, source = int(env), "env"
     if bs is None:
-        bs = _AUTOTUNE_CACHE.get(family)
+        bs, source = _AUTOTUNE_CACHE.get(family), "autotune"
     if bs is None:
         fam = _REGISTRY.get(family)
         bs = fam.default_block if fam is not None else 128
+        source = "default"
+    # per-family resolution counts: a production trace where "default"
+    # dominates a tuned family means the autotune cache never warmed.
+    # NB: under jit this counts *traces*, not executions (see module
+    # docstring caveat) — executable reuse never re-resolves.
+    _obs_registry().counter(
+        "repro_kernel_block_resolutions_total",
+        "block_size() resolutions by family and winning source",
+        family=family, source=source).inc()
     if cap is not None:
         bs = min(bs, cap)
     return max(int(bs), 1)
@@ -175,13 +186,20 @@ _AUTOTUNE_RECORDS: list[dict] = []
 
 
 def autotune(family: str, candidates: Iterable[int],
-             bench_fn: Callable[[int], object], reps: int = 3) -> Optional[int]:
+             bench_fn: Callable[[int], object], reps: int = 3,
+             flops_per_call: Optional[float] = None,
+             bytes_per_call: Optional[float] = None) -> Optional[int]:
     """Time ``bench_fn(block)`` over candidate block sizes; cache the best.
 
     The winner feeds subsequent :func:`block_size` resolutions for
     ``family`` (below any explicit/env override) and is appended to the
     in-process record list that ``benchmarks/roofline.py`` reports.
     Candidates that raise are skipped (e.g. blocks over the VMEM budget).
+
+    ``flops_per_call`` / ``bytes_per_call`` (caller-supplied analytic
+    counts for one ``bench_fn`` invocation) turn the winner's timing into
+    achieved GFLOP/s and GB/s — recorded on the autotune record and
+    exported as ``repro_autotune_*`` gauges for roofline placement.
     """
     timings: dict[int, float] = {}
     for cand in candidates:
@@ -196,13 +214,32 @@ def autotune(family: str, candidates: Iterable[int],
     if not timings:
         return None
     best = min(timings, key=timings.get)
+    best_s = timings[best]
     _AUTOTUNE_CACHE[family] = best
-    _AUTOTUNE_RECORDS.append({
+    record = {
         "family": family,
         "backend": backend(),
         "best_block": best,
         "timings_s": {str(k): v for k, v in timings.items()},
-    })
+    }
+    reg = _obs_registry()
+    reg.gauge("repro_autotune_best_block", "autotune-selected block size",
+              family=family, backend=backend()).set(best)
+    reg.gauge("repro_autotune_best_time_seconds",
+              "best per-call time of the autotune winner",
+              family=family, backend=backend()).set(best_s)
+    if flops_per_call is not None and best_s > 0:
+        record["gflops"] = flops_per_call / best_s / 1e9
+        reg.gauge("repro_autotune_gflops",
+                  "achieved GFLOP/s of the autotune winner (roofline y)",
+                  family=family, backend=backend()).set(record["gflops"])
+    if bytes_per_call is not None and best_s > 0:
+        record["gbytes_per_s"] = bytes_per_call / best_s / 1e9
+        reg.gauge("repro_autotune_gbytes_per_s",
+                  "achieved GB/s of the autotune winner",
+                  family=family, backend=backend()).set(
+                      record["gbytes_per_s"])
+    _AUTOTUNE_RECORDS.append(record)
     return best
 
 

@@ -53,6 +53,14 @@ def gw_main(args) -> None:
     import repro
     from repro.serve import GWServer, ServeConfig
 
+    http_server = None
+    if getattr(args, "metrics_port", 0):
+        from repro.obs import serve_metrics_http
+        http_server = serve_metrics_http(args.metrics_port)
+        host, port = http_server.server_address[:2]
+        print(f"metrics: http://{host}:{port}/metrics "
+              f"(Prometheus text format)")
+
     server = GWServer(ServeConfig(max_batch=args.max_batch,
                                   max_wait_s=args.max_wait,
                                   on_failure=args.on_failure))
@@ -165,6 +173,9 @@ def main():
     gw.add_argument("--max-wait", type=float, default=0.02)
     gw.add_argument("--on-failure", choices=("none", "fallback"),
                     default="fallback")
+    gw.add_argument("--metrics-port", type=int, default=0,
+                    help="serve the process metrics registry as Prometheus "
+                         "text on this port (0 = off)")
     lm = ap.add_argument_group("lm mode")
     lm.add_argument("--arch", default=None)
     lm.add_argument("--reduced", action="store_true")

@@ -97,6 +97,8 @@ class LowRankGWSolver:
                     ε — an overflowing MD kernel is tamed by a smaller
                     step, and ε may legitimately be 0 here
     fault         — chaos-testing hook (health/faults.py)
+    trace         — record per-iteration convergence buffers (err, GW-LR
+                    objective, step scale, rescues) onto ``output.trace``
     """
     rank: int = 0
     cost_rank: int = 0
@@ -111,6 +113,7 @@ class LowRankGWSolver:
     max_rescues: int = 2
     rescue_factor: float = 2.0
     fault: Any = None
+    trace: bool = False
 
     requires_key = True
 
@@ -151,15 +154,19 @@ class LowRankGWSolver:
             mu = Q @ (R.sum(axis=0) / g)
             nu = R @ (Q.sum(axis=0) / g)
             return jnp.sum(jnp.abs(mu - a)) + jnp.sum(jnp.abs(nu - b))
-        (Q, R, g), errors, n_iters, converged, status = pga_loop(
+        def obj_fn(state):
+            return gw_lr_value(state[0], state[1], state[2], fx, fy)
+
+        (Q, R, g), errors, n_iters, converged, status, trace = pga_loop(
             step, err_fn, state0, self.outer_iters, self.tol,
             scaled_step=True, max_rescues=self.max_rescues,
-            rescue_factor=self.rescue_factor, fault=self.fault)
+            rescue_factor=self.rescue_factor, fault=self.fault,
+            trace=self.trace, obj_fn=obj_fn)
 
         value = gw_lr_value(Q, R, g, fx, fy)
         return GWOutput(value=value, coupling=LowRankCoupling(Q, R, g),
                         errors=errors, converged=converged, n_iters=n_iters,
-                        status=status)
+                        status=status, trace=trace)
 
     def _md_step(self, state, scale, a, b, hx, hy):
         """One mirror-descent + Dykstra-projection step on (Q, R, g).
@@ -207,5 +214,5 @@ register_pytree_dataclass(
     data_fields=("epsilon", "gamma", "fault"),
     meta_fields=("rank", "cost_rank", "gamma_rescale", "g_floor",
                  "outer_iters", "inner_iters", "tol", "inner_tol",
-                 "max_rescues", "rescue_factor"))
+                 "max_rescues", "rescue_factor", "trace"))
 register_solver("lowrank_gw")(LowRankGWSolver)

@@ -134,6 +134,11 @@ class QuantizedGWSolver:
     fault         — chaos-testing hook targeting the polish loop; to
                     poison the coarse solve, set ``fault`` on the nested
                     ``base`` config instead (health/faults.py)
+    trace         — record per-iteration convergence buffers for the
+                    *coarse* (anchor-level) solve onto ``output.trace``
+                    (forwarded to the nested ``base`` solver when it
+                    supports tracing; the fixed-budget refine/polish
+                    stages are not loop-traced)
     """
     k_x: int = 0
     k_y: int = 0
@@ -153,6 +158,7 @@ class QuantizedGWSolver:
     max_rescues: int = 2
     rescue_factor: float = 2.0
     fault: Any = None
+    trace: bool = False
 
     requires_key = True
 
@@ -187,6 +193,8 @@ class QuantizedGWSolver:
         if getattr(base, "s_r", None) == 0:
             side = type(base).default_config(max(kx, ky))
             base = dataclasses.replace(base, s_r=side.s_r, s_c=side.s_c)
+        if self.trace and getattr(base, "trace", None) is False:
+            base = dataclasses.replace(base, trace=True)
         return base
 
     def _polish_budget(self, support: int, balanced: bool) -> int:
@@ -243,7 +251,8 @@ class QuantizedGWSolver:
         status = self._combined_status(coarse, polish_status, value, coupling)
         return GWOutput(value=value, coupling=coupling, errors=coarse.errors,
                         converged=coarse.converged, n_iters=coarse.n_iters,
-                        status=status)
+                        status=status,
+                        trace=getattr(coarse, "trace", None))
 
     def _combined_status(self, coarse, polish_status, value, coupling):
         """Join the stage verdicts: the coarse solve's status is the
@@ -293,7 +302,7 @@ class QuantizedGWSolver:
                        inner_tol=self.refine_tol, reg="prox", stable=True,
                        alpha=alpha, lin=lin)
         err_fn = partial(_coo_marginal_err, rows=rows, cols=cols, a=a, b=b)
-        T, _, _, _, status = pga_loop(
+        T, _, _, _, status, _ = pga_loop(
             step, err_fn, T0, piters, 0.0, scaled_step=True,
             max_rescues=self.max_rescues, rescue_factor=self.rescue_factor,
             fault=self.fault)
@@ -361,5 +370,6 @@ register_pytree_dataclass(
     meta_fields=("k_x", "k_y", "max_members", "max_pairs", "anchor_method",
                  "anchor_iters", "compress_metric", "refine_iters",
                  "refine_tol", "polish_iters", "polish_inner_iters",
-                 "value_mode", "debias", "max_rescues", "rescue_factor"))
+                 "value_mode", "debias", "max_rescues", "rescue_factor",
+                 "trace"))
 register_solver("quantized_gw")(QuantizedGWSolver)

@@ -1,0 +1,83 @@
+"""In-jit convergence traces — fixed-size per-iteration buffers.
+
+A :class:`ConvergenceTrace` is a pytree of ``(max_iters,)`` buffers that
+rides through ``health/loop.health_loop`` as part of the ``while_loop``
+carry, recording per-outer-iteration:
+
+``err``        marginal violation (the loop's convergence criterion)
+``objective``  solver objective value (present when the solver supplies
+               an ``obj_fn``; NaN-filled otherwise)
+``delta``      relative iterate movement ‖T_new − T‖₁ / ‖T‖₁
+``mass``       total transported mass ‖T‖₁ after the step
+``scale``      ε-rescue step scale in effect (``rescue_factor**n_rescues``)
+``rescued``    1.0 at iterations where an ε-rescue restart fired
+
+Because it is a NamedTuple of arrays it is automatically a pytree: it
+vmaps (one independent trace per lane — the health layer's ``where``
+masking keeps a poisoned lane's rescue events out of its peers), jits,
+and lands on :class:`~repro.api.output.GWOutput` as ``out.trace``.
+
+Entries past ``n_iters`` keep their NaN fill: the trace length *is*
+``n_iters`` (``scale`` is written at every consumed iteration and is
+always finite, so its non-NaN prefix counts iterations; ``mass`` may
+legitimately hold inf/NaN *inside* the prefix — it records the unhealthy
+value that triggered a rescue).
+Tracing is opt-in (``solver.trace=True``); when off the trace is
+``None`` — zero extra pytree leaves and bitwise-identical outputs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ConvergenceTrace(NamedTuple):
+    """Per-outer-iteration history of one solve (or one vmap lane)."""
+    err: Any          # (max_iters,) marginal violation per iteration
+    objective: Any    # (max_iters,) objective value (NaN if no obj_fn)
+    delta: Any        # (max_iters,) relative L1 movement of the iterate
+    mass: Any         # (max_iters,) total mass ||T||_1 after the step
+    scale: Any        # (max_iters,) rescue step scale in effect
+    rescued: Any      # (max_iters,) 1.0 where an eps-rescue fired
+
+
+def empty_trace(max_iters: int, dtype=jnp.float32) -> ConvergenceTrace:
+    """NaN-filled trace buffers for a loop of at most ``max_iters``."""
+    nan = jnp.full((max_iters,), jnp.nan, dtype=dtype)
+    return ConvergenceTrace(err=nan, objective=nan, delta=nan, mass=nan,
+                            scale=nan, rescued=nan)
+
+
+def n_valid(trace: ConvergenceTrace) -> int:
+    """Number of recorded iterations (non-NaN prefix of ``scale``)."""
+    return int(np.sum(np.isfinite(np.asarray(trace.scale))))
+
+
+def trace_to_dict(trace: Optional[ConvergenceTrace],
+                  n_iters: Optional[int] = None) -> Optional[dict]:
+    """JSON-safe dict of the trace, trimmed to the recorded prefix.
+
+    ``n_iters`` trims explicitly; otherwise the non-NaN prefix of
+    ``scale`` is used. Non-finite values inside the prefix (e.g.
+    ``objective`` with no ``obj_fn``, or the exploded ``mass`` at a
+    rescue iteration) become ``None`` so the result survives strict JSON.
+    """
+    if trace is None:
+        return None
+    n = int(n_iters) if n_iters is not None else n_valid(trace)
+
+    def _col(x):
+        vals = np.asarray(x)[:n].astype(np.float64)
+        return [float(v) if np.isfinite(v) else None for v in vals]
+
+    return {
+        "n_iters": n,
+        "err": _col(trace.err),
+        "objective": _col(trace.objective),
+        "delta": _col(trace.delta),
+        "mass": _col(trace.mass),
+        "scale": _col(trace.scale),
+        "rescued": _col(trace.rescued),
+    }

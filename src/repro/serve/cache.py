@@ -25,6 +25,7 @@ from typing import Any, Callable, Tuple
 import jax
 
 from repro.api.geometry import Geometry
+from repro.obs.registry import registry
 from repro.serve.batching import pad_geometry
 
 
@@ -55,14 +56,20 @@ class GeometryCache:
         key = (geom.content_hash(), tag)
         if key in self._store:
             self.hits += 1
+            registry().counter("repro_cache_hits_total",
+                               "GeometryCache artifact hits").inc()
             self._store.move_to_end(key)
             return self._store[key]
         self.misses += 1
+        registry().counter("repro_cache_misses_total",
+                           "GeometryCache artifact misses").inc()
         artifact = build(geom)
         self._store[key] = artifact
         while len(self._store) > self.max_entries:
             self._store.popitem(last=False)
             self.evictions += 1
+            registry().counter("repro_cache_evictions_total",
+                               "GeometryCache LRU evictions").inc()
         return artifact
 
     # -- built-in artifact kinds -------------------------------------------

@@ -7,36 +7,42 @@ cache's hit/miss/eviction stats — into one JSON-ready dict, which is what
 ``benchmarks/bench_serve.py`` records into ``BENCH_PR7.json`` and the
 serve-smoke CI job asserts on.
 
-``percentiles`` is the shared p50/p95/p99 helper: ``benchmarks/common.py``
-re-exports it so every BENCH_*.json writer reports the same tail
-statistics (satellite of PR 7 — means hide exactly the tail a serving
-layer exists to control).
+Latency samples live in bounded :class:`~repro.obs.registry.Reservoir`
+stores (exact percentiles up to ``sample_cap`` = 8192 samples, unbiased
+uniform reservoir sampling beyond — the PR-7 append-only lists grew
+without bound on long-lived servers). Every counter and latency is also
+mirrored into the process-wide obs registry under ``repro_serve_*`` /
+``repro_cache_*`` names, so the Prometheus exporter
+(``GWServer.metrics_text()`` / ``launch/serve.py --metrics-port``) sees
+server traffic without a second bookkeeping path.
+
+``percentiles`` moved to ``repro.obs.registry`` with the unified
+telemetry layer; it is re-exported here (same name, same behavior) for
+the PR-7 callers.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Optional
 
-import numpy as np
-
-DEFAULT_QS = (50, 95, 99)
-
-
-def percentiles(samples: Sequence[float],
-                qs: Sequence[int] = DEFAULT_QS) -> Dict[str, float]:
-    """``{"p50": ..., "p95": ..., "p99": ...}`` of ``samples`` (linear
-    interpolation; empty input yields NaNs so callers can't mistake "no
-    data" for "zero latency")."""
-    if len(samples) == 0:
-        return {f"p{q}": float("nan") for q in qs}
-    arr = np.asarray(list(samples), dtype=np.float64)
-    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+from repro.obs.registry import (  # noqa: F401 — re-exported shims
+    DEFAULT_QS,
+    DEFAULT_RESERVOIR_CAP,
+    Reservoir,
+    percentiles,
+    registry,
+)
 
 
 class ServeMetrics:
-    """Counters + latency recorder for one server instance."""
+    """Counters + bounded latency recorder for one server instance.
 
-    def __init__(self):
+    sample_cap — reservoir size for latency/queue-wait samples: exact
+    percentiles up to this many completed requests, a uniform sample of
+    the full history beyond (default 8192; memory stays O(cap) forever).
+    """
+
+    def __init__(self, sample_cap: int = DEFAULT_RESERVOIR_CAP):
         self.n_submitted = 0
         self.n_completed = 0
         self.n_failed = 0        # unhealthy after the batched attempt
@@ -44,32 +50,55 @@ class ServeMetrics:
         self.n_batches = 0
         self.n_lanes = 0         # total dispatched lanes incl. filler
         self.n_filler_lanes = 0
-        self.latencies_s: List[float] = []
-        self.queue_waits_s: List[float] = []
+        self.sample_cap = sample_cap
+        self.latencies_s = Reservoir(sample_cap)
+        self.queue_waits_s = Reservoir(sample_cap)
         self._t0 = time.perf_counter()
 
     # -- recording ----------------------------------------------------------
 
     def record_submit(self) -> float:
         self.n_submitted += 1
+        registry().counter("repro_serve_requests_total",
+                           "requests submitted to GWServer").inc()
         return time.perf_counter()
 
     def record_batch(self, n_real: int, n_lanes: int) -> None:
         self.n_batches += 1
         self.n_lanes += n_lanes
         self.n_filler_lanes += n_lanes - n_real
+        reg = registry()
+        reg.counter("repro_serve_batches_total",
+                    "vmapped batches dispatched").inc()
+        reg.counter("repro_serve_lanes_total",
+                    "dispatched lanes incl. filler").inc(n_lanes)
+        reg.counter("repro_serve_filler_lanes_total",
+                    "pow2-padding filler lanes dispatched").inc(
+                        n_lanes - n_real)
 
     def record_result(self, submitted_at: float, dispatched_at: float,
                       failed: bool, fell_back: bool) -> float:
         now = time.perf_counter()
         latency = now - submitted_at
+        queue_wait = dispatched_at - submitted_at
         self.n_completed += 1
-        self.latencies_s.append(latency)
-        self.queue_waits_s.append(dispatched_at - submitted_at)
+        self.latencies_s.add(latency)
+        self.queue_waits_s.add(queue_wait)
         if failed:
             self.n_failed += 1
         if fell_back:
             self.n_fallbacks += 1
+        reg = registry()
+        reg.histogram("repro_serve_latency_seconds",
+                      "submit-to-result request latency").observe(latency)
+        reg.histogram("repro_serve_queue_wait_seconds",
+                      "submit-to-dispatch queue wait").observe(queue_wait)
+        if failed:
+            reg.counter("repro_serve_failed_total",
+                        "requests unhealthy after the batched attempt").inc()
+        if fell_back:
+            reg.counter("repro_serve_fallbacks_total",
+                        "per-request solo fallback re-solves").inc()
         return latency
 
     # -- reporting ----------------------------------------------------------

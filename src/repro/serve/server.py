@@ -12,9 +12,11 @@ geometries to size buckets through the :class:`GeometryCache`, and
 enqueues the request under its **batch signature** (padded pytree
 structure + leaf avals). A bucket flushes when it reaches
 ``max_batch`` requests or its oldest request is older than
-``max_wait_s`` (checked cooperatively on every submit/poll/result/flush —
-there is no background thread; drive the server from one thread and call
-``poll``/``flush`` to advance time-based flushes).
+``max_wait_s`` — enforced by a background flusher thread (daemon, ticks
+at ``max_wait_s / 4``; disable with ``ServeConfig(flush_thread=False)``
+to fall back to the PR-7 cooperative mode where the deadline is only
+checked on submit/poll/result/flush calls). Server state is guarded by
+one re-entrant lock, so submits and timer flushes interleave safely.
 
 A flush stacks the bucket into one vmapped jit call — filler lanes
 (replicas of lane 0 with fault hooks disarmed) round the lane count up to
@@ -33,8 +35,10 @@ ladder for that request only.
 """
 from __future__ import annotations
 
+import threading
 import time
 import warnings
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -54,6 +58,8 @@ from repro.serve.batching import (
     pad_problem,
     stack_items,
 )
+from repro.obs.registry import registry
+from repro.obs.span import span
 from repro.serve.cache import GeometryCache
 from repro.serve.metrics import ServeMetrics
 
@@ -65,8 +71,13 @@ class ServeConfig:
     buckets       — geometry-size buckets requests are padded up to
     max_batch     — flush a bucket once it holds this many requests
     max_wait_s    — flush a non-empty bucket once its oldest request has
-                    waited this long (cooperative: checked on every
-                    server call, there is no background thread)
+                    waited this long (enforced by the flusher thread;
+                    with ``flush_thread=False``, checked cooperatively on
+                    every server call)
+    flush_thread  — run a background daemon thread that ticks every
+                    ``max_wait_s / 4`` and flushes overdue buckets, so
+                    ``max_wait_s`` is honored in wall-clock time even
+                    when no server call arrives
     cache_entries — GeometryCache capacity (artifacts, LRU)
     on_failure    — per-request policy for unhealthy lanes: "none"
                     returns the DIVERGED/STALLED output as-is (inspect
@@ -80,6 +91,7 @@ class ServeConfig:
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     max_batch: int = 8
     max_wait_s: float = 0.02
+    flush_thread: bool = True
     cache_entries: int = 128
     on_failure: str = "fallback"
     donate: bool = True
@@ -149,6 +161,25 @@ def _run_lane(problem, solver, key):
     return solver.run(problem, key)
 
 
+def _flusher_main(server_ref, interval_s: float,
+                  stop: threading.Event) -> None:
+    """Wall-clock flusher loop: pump overdue buckets every ``interval_s``.
+
+    Holds only a weakref to the server so an abandoned (un-``close``d)
+    server can still be garbage collected; the loop exits when the
+    server dies or ``stop`` is set.
+    """
+    while not stop.wait(interval_s):
+        server = server_ref()
+        if server is None:
+            return
+        try:
+            server._pump(source="timer")
+        except Exception:  # noqa: BLE001 — the flusher must outlive hiccups
+            pass
+        del server
+
+
 class GWServer:
     """Batched, cached, observable front door over the solver registry."""
 
@@ -159,8 +190,32 @@ class GWServer:
         self._requests: Dict[int, _Request] = {}
         self._queues: Dict[Any, List[int]] = {}
         self._next_rid = 0
+        self._lock = threading.RLock()
         donate = (0,) if self.config.donate else ()
         self._exec = jax.jit(jax.vmap(_run_lane), donate_argnums=donate)
+        self._flusher_stop = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        if self.config.flush_thread and self.config.max_wait_s > 0:
+            self._flusher = threading.Thread(
+                target=_flusher_main,
+                args=(weakref.ref(self), self.config.max_wait_s / 4,
+                      self._flusher_stop),
+                name="gwserver-flusher", daemon=True)
+            self._flusher.start()
+
+    def close(self) -> None:
+        """Stop the background flusher thread (idempotent). Queued
+        requests stay retrievable via ``result``/``results``."""
+        self._flusher_stop.set()
+        if self._flusher is not None:
+            self._flusher.join(timeout=1.0)
+            self._flusher = None
+
+    def __del__(self):
+        try:
+            self._flusher_stop.set()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
 
     # -- submit -------------------------------------------------------------
 
@@ -169,85 +224,110 @@ class GWServer:
                key: Optional[jax.Array] = None,
                validate: bool = True) -> int:
         """Enqueue one solve request; returns its request id."""
-        if solver is None:
-            solver = select_solver(problem)
-        elif isinstance(solver, str):
-            solver = get_solver(solver).default_config(max(problem.shape))
-        if key is None and getattr(type(solver), "requires_key", False):
-            raise ValueError(
-                f"{type(solver).__name__} needs a PRNG key: "
-                f"submit(problem, solver, key=jax.random.PRNGKey(seed))")
-        if validate and not getattr(problem, "_validated", False):
-            problem.check()
-        m, n = problem.shape
-        mb = bucket_for(m, self.config.buckets)
-        nb = bucket_for(n, self.config.buckets)
-        padded = pad_problem(problem, mb, nb,
-                             geom_x=self.cache.padded(problem.geom_x, mb),
-                             geom_y=self.cache.padded(problem.geom_y, nb))
-        item = (padded, solver, key)
-        sig = batch_signature(item)
-        rid = self._next_rid
-        self._next_rid += 1
-        req = _Request(rid=rid, problem=problem, solver=solver, key=key,
-                       item=item, sig=sig, shape=(m, n),
-                       padded_shape=(mb, nb),
-                       submitted_at=self.metrics.record_submit())
-        self._requests[rid] = req
-        self._queues.setdefault(sig, []).append(rid)
-        if len(self._queues[sig]) >= self.config.max_batch:
-            self._flush_bucket(sig)
-        else:
-            self._pump()
-        return rid
+        with span("serve.submit"):
+            if solver is None:
+                solver = select_solver(problem)
+            elif isinstance(solver, str):
+                solver = get_solver(solver).default_config(
+                    max(problem.shape))
+            if key is None and getattr(type(solver), "requires_key", False):
+                raise ValueError(
+                    f"{type(solver).__name__} needs a PRNG key: "
+                    f"submit(problem, solver, key=jax.random.PRNGKey(seed))")
+            if validate and not getattr(problem, "_validated", False):
+                problem.check()
+            m, n = problem.shape
+            mb = bucket_for(m, self.config.buckets)
+            nb = bucket_for(n, self.config.buckets)
+            with span("serve.pad"):
+                padded = pad_problem(
+                    problem, mb, nb,
+                    geom_x=self.cache.padded(problem.geom_x, mb),
+                    geom_y=self.cache.padded(problem.geom_y, nb))
+            item = (padded, solver, key)
+            sig = batch_signature(item)
+            with self._lock:
+                rid = self._next_rid
+                self._next_rid += 1
+                req = _Request(rid=rid, problem=problem, solver=solver,
+                               key=key, item=item, sig=sig, shape=(m, n),
+                               padded_shape=(mb, nb),
+                               submitted_at=self.metrics.record_submit())
+                self._requests[rid] = req
+                self._queues.setdefault(sig, []).append(rid)
+                if len(self._queues[sig]) >= self.config.max_batch:
+                    self._flush_bucket(sig, source="full")
+                else:
+                    self._pump()
+            return rid
 
     # -- flushing -----------------------------------------------------------
 
-    def _pump(self) -> None:
-        """Flush every bucket whose oldest request exceeded max_wait_s."""
-        now = time.perf_counter()
-        for sig in list(self._queues):
-            rids = self._queues[sig]
-            if rids and (now - self._requests[rids[0]].submitted_at
-                         >= self.config.max_wait_s):
-                self._flush_bucket(sig)
+    def _pump(self, source: str = "call") -> None:
+        """Flush every bucket whose oldest request exceeded max_wait_s.
+        ``source`` tags the dispatch span: "call" for cooperative checks
+        on server calls, "timer" for the background flusher thread."""
+        with self._lock:
+            now = time.perf_counter()
+            for sig in list(self._queues):
+                rids = self._queues[sig]
+                if rids and (now - self._requests[rids[0]].submitted_at
+                             >= self.config.max_wait_s):
+                    self._flush_bucket(sig, source=source)
 
     def flush(self) -> None:
         """Dispatch every non-empty bucket immediately."""
-        for sig in list(self._queues):
-            if self._queues[sig]:
-                self._flush_bucket(sig)
+        with self._lock:
+            for sig in list(self._queues):
+                if self._queues[sig]:
+                    self._flush_bucket(sig, source="flush")
 
-    def _flush_bucket(self, sig) -> None:
-        rids = self._queues.pop(sig, [])
-        if not rids:
-            return
-        items = [self._requests[rid].item for rid in rids]
-        n_lanes = next_pow2(len(items))
-        if len(items) < n_lanes:
-            p0, s0, k0 = items[0]
-            items.extend([(p0, disarm_fault(s0), k0)]
-                         * (n_lanes - len(items)))
-        stacked_p, stacked_s, stacked_k = stack_items(items)
-        with warnings.catch_warnings():
-            # CPU backends can't alias every donated buffer — harmless
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            out = self._exec(stacked_p, stacked_s, stacked_k)
-        batch = _Batch(out=out, rids=rids, n_lanes=n_lanes)
-        self.metrics.record_batch(len(rids), n_lanes)
-        for lane, rid in enumerate(rids):
-            req = self._requests[rid]
-            req.state = "running"
-            req.batch = batch
-            req.lane = lane
+    def _flush_bucket(self, sig, source: str = "call") -> None:
+        with self._lock:
+            rids = self._queues.pop(sig, [])
+            if not rids:
+                return
+            items = [self._requests[rid].item for rid in rids]
+            n_lanes = next_pow2(len(items))
+            if len(items) < n_lanes:
+                p0, s0, k0 = items[0]
+                items.extend([(p0, disarm_fault(s0), k0)]
+                             * (n_lanes - len(items)))
+            with span("serve.batch", lanes=n_lanes, real=len(rids)):
+                stacked_p, stacked_s, stacked_k = stack_items(items)
+            with span("serve.dispatch", lanes=n_lanes,
+                      source=source) as sp:
+                before = self._exec_cache_size()
+                with warnings.catch_warnings():
+                    # CPU backends can't alias every donated buffer —
+                    # harmless
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    out = self._exec(stacked_p, stacked_s, stacked_k)
+                sp["compiled"] = bool(before >= 0
+                                      and self._exec_cache_size() > before)
+            batch = _Batch(out=out, rids=rids, n_lanes=n_lanes)
+            self.metrics.record_batch(len(rids), n_lanes)
+            for lane, rid in enumerate(rids):
+                req = self._requests[rid]
+                req.state = "running"
+                req.batch = batch
+                req.lane = lane
+
+    def _exec_cache_size(self) -> int:
+        try:
+            return self._exec._cache_size()
+        except Exception:  # noqa: BLE001 — observability only
+            return -1
 
     # -- poll / result ------------------------------------------------------
 
     def poll(self, rid: int) -> str:
         """Non-blocking state of a request: queued / running / done.
         Also advances time-based flushes (cooperative scheduling)."""
-        req = self._req(rid)
+        with self._lock:
+            req = self._req(rid)
         self._pump()
         if req.state == "running":
             value = req.batch.out.value
@@ -257,33 +337,41 @@ class GWServer:
 
     def result(self, rid: int) -> RequestResult:
         """Block until the request's batch completes; per-request outcome."""
-        req = self._req(rid)
-        if req.result is not None:
+        with self._lock:
+            req = self._req(rid)
+            if req.result is not None:
+                return req.result
+            if req.state == "queued":
+                self._flush_bucket(req.sig)
+            batch = req.batch
+        # block outside the lock: the flusher and other submitters keep
+        # running while XLA computes
+        with span("serve.block"):
+            jax.block_until_ready(batch.out.value)
+        with self._lock:
+            if req.result is not None:     # lost a race to another thread
+                return req.result
+            lane = req.lane
+            out = jax.tree.map(lambda x: x[lane], batch.out)
+            failed = bool(np.asarray(out.status.code) >= STALLED) or not \
+                bool(np.all(np.isfinite(np.asarray(out.value))))
+            fell_back = False
+            if failed and self.config.on_failure == "fallback":
+                with span("serve.fallback", rid=rid):
+                    out, fell_back = self._fallback(req)
+            status_name = (STATUS_NAMES[int(np.asarray(out.status.code))]
+                           if out.status is not None else "UNKNOWN")
+            latency = self.metrics.record_result(
+                req.submitted_at, batch.dispatched_at, failed, fell_back)
+            req.state = "done"
+            req.result = RequestResult(
+                rid=rid, value=float(np.asarray(out.value)), output=out,
+                status=out.status, status_name=status_name, failed=failed,
+                fell_back=fell_back, shape=req.shape,
+                padded_shape=req.padded_shape, latency_s=latency)
+            req.batch = None          # release the stacked batch for GC
+            req.item = None
             return req.result
-        if req.state == "queued":
-            self._flush_bucket(req.sig)
-        batch = req.batch
-        jax.block_until_ready(batch.out.value)
-        lane = req.lane
-        out = jax.tree.map(lambda x: x[lane], batch.out)
-        failed = bool(np.asarray(out.status.code) >= STALLED) or not bool(
-            np.all(np.isfinite(np.asarray(out.value))))
-        fell_back = False
-        if failed and self.config.on_failure == "fallback":
-            out, fell_back = self._fallback(req)
-        status_name = (STATUS_NAMES[int(np.asarray(out.status.code))]
-                       if out.status is not None else "UNKNOWN")
-        latency = self.metrics.record_result(
-            req.submitted_at, batch.dispatched_at, failed, fell_back)
-        req.state = "done"
-        req.result = RequestResult(
-            rid=rid, value=float(np.asarray(out.value)), output=out,
-            status=out.status, status_name=status_name, failed=failed,
-            fell_back=fell_back, shape=req.shape,
-            padded_shape=req.padded_shape, latency_s=latency)
-        req.batch = None          # release the stacked batch for GC
-        req.item = None
-        return req.result
 
     def results(self, rids: Sequence[int]) -> List[RequestResult]:
         """Drain a set of requests (flushes any still queued)."""
@@ -311,6 +399,12 @@ class GWServer:
     def stats(self) -> dict:
         """One flat dict: request/batch/latency metrics + cache counters."""
         return self.metrics.summary(self.cache.stats())
+
+    def metrics_text(self) -> str:
+        """The process-wide metrics registry (including this server's
+        ``repro_serve_*`` series) in Prometheus text exposition format —
+        the payload ``launch/serve.py --metrics-port`` serves."""
+        return registry().prometheus_text()
 
     def reset_stats(self) -> None:
         """Zero metrics and cache counters, keeping compiled executables

@@ -88,8 +88,9 @@ def _fast_configs(n=N):
 def test_healthy_loop_reports_converged():
     step = lambda T: 0.5 * T + 0.5          # noqa: E731 — contraction to 1
     err = lambda T: jnp.sum(jnp.abs(T - 1))  # noqa: E731
-    T, errs, n_iters, conv, status = health_loop(
+    T, errs, n_iters, conv, status, trace = health_loop(
         step, err, jnp.zeros(4), 100, 1e-6)
+    assert trace is None                     # tracing is opt-in
     assert bool(conv)
     assert status.describe() == "CONVERGED"
     assert int(status.fail_iter) == -1
@@ -99,7 +100,8 @@ def test_healthy_loop_reports_converged():
 def test_maxiter_status():
     step = lambda T: T + 1.0                 # noqa: E731 — never settles
     err = lambda T: jnp.float32(0.0)         # noqa: E731
-    *_, conv, status = health_loop(step, err, jnp.zeros(2), 5, 1e-9)
+    res = health_loop(step, err, jnp.zeros(2), 5, 1e-9)
+    conv, status = res.converged, res.status
     assert not bool(conv)
     assert status.describe() == "MAXITER"
 
@@ -109,7 +111,8 @@ def test_stall_classification():
     CONVERGED (the dense-PGA mixing-fixed-point failure mode)."""
     step = lambda T: T                       # noqa: E731 — instant fixed point
     err = lambda T: jnp.float32(0.9)         # noqa: E731 — huge violation
-    *_, conv, status = health_loop(step, err, jnp.ones(3), 10, 1e-6)
+    res = health_loop(step, err, jnp.ones(3), 10, 1e-6)
+    conv, status = res.converged, res.status
     assert bool(conv)                        # converged flag: tol was met...
     assert status.describe() == "STALLED"    # ...but the lattice knows better
 
@@ -118,7 +121,7 @@ def test_nan_detected_at_correct_iteration():
     def step(T):
         return jnp.where(T[0] >= 3, jnp.nan, T + 1)
     err = lambda T: jnp.float32(0.0)         # noqa: E731
-    T, errs, n_iters, conv, status = health_loop(
+    T, errs, n_iters, conv, status, _ = health_loop(
         step, err, jnp.zeros(2), 20, 0.0)
     assert status.describe() == "DIVERGED"
     assert int(status.fail_iter) == 3        # step from T[0]=3 poisons
@@ -132,7 +135,7 @@ def test_mass_explosion_is_divergence():
     def step(T):
         return jnp.where(T[0] >= 2, 1e25, T + 1)
     err = lambda T: jnp.float32(0.0)         # noqa: E731
-    *_, status = health_loop(step, err, jnp.zeros(2), 20, 0.0)
+    status = health_loop(step, err, jnp.zeros(2), 20, 0.0).status
     assert status.describe() == "DIVERGED"
     assert int(status.fail_iter) == 2
 
@@ -143,7 +146,7 @@ def test_mass_collapse_is_divergence():
     def step(T):
         return jnp.where(T[0] >= 2, 0.0, T + 1)
     err = lambda T: jnp.float32(0.0)         # noqa: E731
-    *_, status = health_loop(step, err, jnp.zeros(2) + 0.5, 20, 0.0)
+    status = health_loop(step, err, jnp.zeros(2) + 0.5, 20, 0.0).status
     assert status.describe() == "DIVERGED"
 
 
@@ -153,7 +156,7 @@ def test_rescue_restarts_with_escalated_scale():
     def step(T, scale):
         return jnp.where(scale < 2.0, jnp.inf, T + 1.0)
     err = lambda T: jnp.float32(0.0)         # noqa: E731
-    T, errs, n_iters, conv, status = health_loop(
+    T, errs, n_iters, conv, status, _ = health_loop(
         step, err, jnp.zeros(2), 10, 0.0, scaled_step=True, max_rescues=2)
     assert status.describe() == "MAXITER"    # healthy after rescue
     assert int(status.n_rescues) == 1
@@ -165,15 +168,15 @@ def test_rescue_restarts_with_escalated_scale():
 def test_rescue_exhaustion_diverges():
     step = lambda T, scale: jnp.full_like(T, jnp.nan)    # noqa: E731
     err = lambda T: jnp.float32(0.0)                     # noqa: E731
-    *_, status = health_loop(step, err, jnp.ones(2), 10, 0.0,
-                             scaled_step=True, max_rescues=2)
+    status = health_loop(step, err, jnp.ones(2), 10, 0.0,
+                         scaled_step=True, max_rescues=2).status
     assert status.describe() == "DIVERGED"
     assert int(status.n_rescues) == 2
     assert int(status.fail_iter) == 0
 
 
 def test_zero_budget_loop():
-    T, errs, n_iters, conv, status = health_loop(
+    T, errs, n_iters, conv, status, _ = health_loop(
         lambda T: T, lambda T: jnp.float32(0), jnp.ones(2), 0, 1e-6)
     assert int(n_iters) == 0 and not bool(conv)
     assert status.describe() == "MAXITER"
