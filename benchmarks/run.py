@@ -85,7 +85,7 @@ def run_solver_mode(names, n: int, loss: str, reps: int,
 _SUITE = ("bench_fig2", "bench_fig3_ugw", "bench_fig4_sensitivity",
           "bench_fig5_scaling", "bench_fig6_fgw", "bench_grid_vs_coo",
           "bench_spar_cost", "bench_tables23_graphs", "bench_multiscale",
-          "bench_lowrank", "bench_lm_step", "bench_serve")
+          "bench_lowrank", "bench_lm_step", "bench_serve", "bench_diff")
 
 
 def run_full_suite() -> None:

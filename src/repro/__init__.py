@@ -6,7 +6,6 @@ solver config (or none — the solver is auto-selected from the problem
 structure). The per-variant functions in ``repro.core`` (``spar_gw``,
 ``gw_dense``, ...) remain available as deprecation shims over this layer.
 """
-from repro import obs
 from repro.api import (
     DenseGWSolver,
     Geometry,
@@ -26,8 +25,10 @@ from repro.api import (
     select_solver,
     solve,
 )
+from repro import diff, obs  # noqa: E402  (after api: diff closes the loop)
 
 __all__ = [
+    "diff",
     "obs",
     "Geometry",
     "QuadraticProblem",

@@ -25,11 +25,19 @@ rescued (restart from the last healthy iterate with escalated
 escalation) or end the lane with a DIVERGED status. The returned
 :class:`~repro.health.loop.LoopResult` carries a per-lane
 :class:`~repro.health.status.SolveStatus`.
+
+Differentiation (repro/diff/fixed_point.py, DESIGN.md §11): the loop is
+wrapped in a Danskin-envelope ``custom_vjp`` that declares the returned
+fixed point locally constant in the problem data, so ``jax.grad`` of a
+solver's post-loop value recomputation yields the implicit gradient in
+one cost contraction — no unrolling, no per-solver code. Primal
+numerics are unchanged.
 """
 from __future__ import annotations
 
 from typing import Callable
 
+from repro.diff.fixed_point import envelope_loop
 from repro.health.loop import LoopResult, health_loop
 
 __all__ = ["pga_loop", "LoopResult", "health_loop"]
@@ -57,5 +65,10 @@ def pga_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
     trace)`` with ``errors`` of static shape (max_iters,), NaN-padded past
     ``n_iters`` and at rescued/diverged iterations; ``trace`` is None
     unless ``trace=True`` was passed.
+
+    Reverse-mode AD treats the whole result as locally constant (the
+    Danskin envelope — repro/diff/fixed_point.py), which is exactly the
+    implicit gradient once the caller recomputes its value from live
+    data at the returned fixed point.
     """
-    return health_loop(step_fn, err_fn, T0, max_iters, tol, **health_kw)
+    return envelope_loop(step_fn, err_fn, T0, max_iters, tol, **health_kw)

@@ -1,0 +1,52 @@
+"""``repro.diff`` — implicit differentiation of GW solves.
+
+Makes ``repro.solve(...).value`` a trainable loss: the fixed-point
+driver carries a Danskin/envelope ``custom_vjp`` (fixed_point.py), so
+``jax.grad`` through a solve costs one cost-gradient contraction
+instead of unrolling the outer loop. On top of that sit
+
+* :func:`~repro.diff.losses.gw_loss` / :func:`~repro.diff.losses.
+  fgw_loss` — jit+grad+vmap-composable scalar losses;
+* :func:`~repro.diff.barycenter.gw_barycenter` — free-support GW
+  barycenters by AdamW descent on the support;
+* :mod:`repro.diff.unrolled` — unrolled-autodiff reference
+  implementations (the correctness/cost baseline, not the product).
+
+``fixed_point`` is imported eagerly (``api/driver`` needs it at import
+time); the loss/barycenter layers load lazily to keep the
+driver → diff → losses → api.solve import cycle open.
+"""
+from __future__ import annotations
+
+from repro.diff.fixed_point import envelope_loop, locally_constant
+
+__all__ = [
+    "envelope_loop",
+    "locally_constant",
+    "gw_loss",
+    "fgw_loss",
+    "quadratic_loss",
+    "gw_barycenter",
+    "BarycenterResult",
+]
+
+_LAZY = {
+    "gw_loss": "repro.diff.losses",
+    "fgw_loss": "repro.diff.losses",
+    "quadratic_loss": "repro.diff.losses",
+    "gw_barycenter": "repro.diff.barycenter",
+    "BarycenterResult": "repro.diff.barycenter",
+}
+
+
+def __getattr__(name):  # PEP 562
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.diff' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -1,0 +1,190 @@
+"""Envelope (Danskin) differentiation of the fixed-point driver.
+
+The outer loop of every solver is a ``lax.while_loop`` —
+forward-differentiable, but *not* reverse-differentiable, and even where
+unrolling is possible it costs O(iters) memory and wall time on the
+backward pass. This module makes the loop reverse-differentiable at the
+cost of **one** cost-gradient contraction by exploiting the envelope
+structure of the plug-in GW estimate:
+
+Every solver computes its reported ``value`` *after* the loop, from live
+(differentiable) problem data and the returned coupling — e.g.
+``gw_objective(Cx, Cy, T*, loss)`` for dense, ``Σ T*·cost(T*)`` on the
+COO support for spar, ``gw_lr_value(Q, R, g, fx, fy)`` for low-rank. At
+a converged proximal / mirror-descent fixed point, ``T*`` is a
+stationary point of the objective ``F`` over the coupling polytope, so
+by Danskin's theorem
+
+    dV/dθ = ∂F(θ, T)/∂θ |_{T = T*}          (T* locally constant in θ)
+
+— the coupling's own sensitivity ``dT*/dθ`` contributes nothing. The
+implementation therefore declares the whole loop **locally constant**: a
+``jax.custom_vjp`` whose backward pass returns zero cotangents for every
+input, so reverse-mode AD flows only through the post-loop value
+recomputation. That single contraction *is* the Danskin gradient.
+
+The subtlety is that solvers hand the driver *closures* (``step_fn``,
+``err_fn``, ``obj_fn``) that capture problem data as tracers; a
+``custom_vjp`` cannot see through captured tracers
+(``CustomVJPException``). :func:`_closure_convert_all` hoists every
+captured value — inexact *and* integer — into explicit operands, which
+then receive the zero (or ``float0``) cotangents like everything else.
+
+Guarantees (tested by tests/test_diff.py and the tier-1 suite):
+
+* primal numerics are bitwise-unchanged — ``closure_convert`` replays
+  the very jaxpr the closure would have produced;
+* health semantics (ε-rescues, fault injection, ``trace=True``) pass
+  through untouched: the envelope wraps the *health-instrumented* loop,
+  and a rescue that fires inside the loop changes which fixed point is
+  reached, never how it is differentiated;
+* composes with ``jit``, ``vmap``-of-``grad`` and ``grad``-of-``vmap``.
+
+Forward-mode (``jax.jvp``) through the loop is intentionally cut along
+with reverse mode — ``custom_vjp`` supports reverse only. Nothing in the
+repo used forward-mode through a solve; the loss surface in
+``diff/losses.py`` is the supported entry point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.health.loop import LoopResult, health_loop
+
+__all__ = ["envelope_loop", "locally_constant"]
+
+
+def _zero_cotangent(x):
+    """A zero cotangent matching ``x``: dense zeros for inexact dtypes,
+    ``float0`` for integer/bool leaves (the only cotangent JAX accepts
+    for non-differentiable dtypes, e.g. a FaultSpec's ``at_iter``)."""
+    aval = jax.core.get_aval(x)
+    if jnp.issubdtype(aval.dtype, jnp.inexact):
+        return jnp.zeros(aval.shape, aval.dtype)
+    return np.zeros(aval.shape, dtype=jax.dtypes.float0)
+
+
+class _StaticFn:
+    """Identity-hashed wrapper so a Python callable can ride in a
+    ``custom_vjp`` nondiff argument slot."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+
+    def __hash__(self):
+        return id(self.fn)
+
+    def __eq__(self, other):
+        return isinstance(other, _StaticFn) and other.fn is self.fn
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _const_call(static: _StaticFn, operands: tuple):
+    return static.fn(*operands)
+
+
+def _const_call_fwd(static, operands):
+    return _const_call(static, operands), operands
+
+
+def _const_call_bwd(static, operands, _cotangent):
+    return (jax.tree.map(_zero_cotangent, operands),)
+
+
+_const_call.defvjp(_const_call_fwd, _const_call_bwd)
+
+
+def locally_constant(fn: Callable, *operands):
+    """Run ``fn(*operands)`` declaring the result locally constant in
+    every operand: the primal is unchanged, reverse-mode AD sees zero
+    gradients through this call. ``fn`` must not capture tracers — pass
+    everything traced through ``operands`` (use ``jax.closure_convert``
+    to hoist captured values first)."""
+    return _const_call(_StaticFn(fn), operands)
+
+
+def _closure_convert_all(fn: Callable, *example_args):
+    """:func:`jax.closure_convert`, except *every* captured tracer is
+    hoisted into an explicit operand — including the integer / bool /
+    PRNG-key captures (spar's sampled support indices, keys) that
+    ``closure_convert`` leaves baked into the jaxpr as constants
+    (it only hoists perturbable inexact dtypes). A baked tracer
+    constant survives eager grad and jit-of-grad, where the enclosing
+    trace is still live when the jaxpr is consumed, but breaks
+    grad-of-jit: the pjit forward is compiled after its trace closes,
+    and an executable cannot take a dead trace's tracer as a constant.
+    Hoisted integer operands receive ``float0`` cotangents from
+    :func:`_zero_cotangent` like everything else."""
+    flat, in_tree = jax.tree.flatten(tuple(example_args))
+
+    def flat_fn(*flat_args):
+        return fn(*jax.tree.unflatten(in_tree, flat_args))
+
+    closed, out_shape = jax.make_jaxpr(flat_fn, return_shape=True)(*flat)
+    out_tree = jax.tree.structure(out_shape)
+    jaxpr, n_consts = closed.jaxpr, len(closed.consts)
+
+    def converted(*args_then_consts):
+        if n_consts:
+            args = args_then_consts[:-n_consts]
+            hoisted = args_then_consts[-n_consts:]
+        else:
+            args, hoisted = args_then_consts, ()
+        flat_args, _ = jax.tree.flatten(tuple(args))
+        out = jax.core.eval_jaxpr(jaxpr, list(hoisted), *flat_args)
+        return jax.tree.unflatten(out_tree, out)
+
+    return converted, list(closed.consts)
+
+
+# example aval for the rescue-escalation scalar handed to scaled steps;
+# must match what health_loop passes (f32 regardless of x64 mode):
+# ``jnp.float32(rescue_factor) ** n_rescues``
+def _scale_example():
+    return jnp.float32(1.0)
+
+
+def envelope_loop(step_fn: Callable, err_fn: Callable, T0, max_iters: int,
+                  tol: float, **health_kw) -> LoopResult:
+    """Drop-in ``pga_loop`` with the Danskin envelope installed.
+
+    Same contract as :func:`repro.health.loop.health_loop`; the returned
+    :class:`LoopResult` is numerically identical but reverse-mode AD
+    treats every field of it (iterate, errors, status, trace) as locally
+    constant in the problem data. Solvers that recompute their value
+    from live data after the loop — all of them — become differentiable
+    for free; see the module docstring for why that gradient is the
+    right one at a converged fixed point.
+    """
+    fault = health_kw.pop("fault", None)
+    obj_fn = health_kw.pop("obj_fn", None)
+    step_args = ((T0, _scale_example())
+                 if health_kw.get("scaled_step", False) else (T0,))
+    # hoist ALL tracer captures out of the solver closures — integer
+    # captures (support indices, PRNG keys) included, or grad-of-jit
+    # leaks them as dead-trace constants (see _closure_convert_all)
+    step_c, step_hoisted = _closure_convert_all(step_fn, *step_args)
+    err_c, err_hoisted = _closure_convert_all(err_fn, T0)
+    if obj_fn is not None and health_kw.get("trace", False):
+        obj_c, obj_hoisted = _closure_convert_all(obj_fn, T0)
+    else:
+        # without trace=True the loop never calls obj_fn — drop it so an
+        # unconverted closure can't leak tracers into the custom_vjp
+        obj_c, obj_hoisted = None, ()
+
+    def run_loop(T0_, step_h, err_h, obj_h, fault_):
+        sf = lambda *args: step_c(*args, *step_h)          # noqa: E731
+        ef = lambda t: err_c(t, *err_h)                    # noqa: E731
+        of = (lambda t: obj_c(t, *obj_h)) if obj_c is not None else None
+        return health_loop(sf, ef, T0_, max_iters, tol, fault=fault_,
+                           obj_fn=of, **health_kw)
+
+    return locally_constant(run_loop, T0, tuple(step_hoisted),
+                            tuple(err_hoisted), tuple(obj_hoisted), fault)

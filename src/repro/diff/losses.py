@@ -1,0 +1,227 @@
+"""``gw_loss`` / ``fgw_loss`` — GW solves as trainable losses.
+
+Thin, composable wrappers over :func:`repro.solve`: the heavy lifting is
+the Danskin envelope on the fixed-point driver (diff/fixed_point.py),
+which makes ``solve(...).value`` reverse-differentiable w.r.t. every
+inexact leaf of the problem — cost matrices, point clouds, fused
+features / ``M``, ``fused_penalty``, ``lam``. These wrappers add the
+ergonomics: build the problem from arrays, pick a solver, and (opt-in)
+recover **marginal** gradients for balanced problems, where the
+coupling-polytope constraint makes the plain envelope return zero.
+
+All three losses compose with ``jax.jit``, ``jax.grad`` and
+``jax.vmap`` in any order; see tests/test_diff.py.
+
+What is differentiable, per family (DESIGN.md §11 has the derivation):
+
+============  =========================================================
+solver        differentiable w.r.t.
+============  =========================================================
+dense_gw      Cx, Cy (or points), M / features, ``fused_penalty``;
+              ``lam`` and marginals for unbalanced problems (the KL
+              penalty terms are *live* paths through the envelope —
+              measured FD agreement ~1e-10); balanced marginals via
+              ``marginal_grads=True`` — a **dual-certificate
+              approximation**, see the caveat on
+              :func:`quadratic_loss`
+spar_gw       gathered Cx, Cy, features, ``fused_penalty``, ``lam``
+              — **not** the marginals: the importance-sampled support
+              is drawn from (a, b), a discrete, non-differentiable map
+lowrank_gw    point clouds through the exact rank-(d+2) factors (and
+              precomputed costs through the sketch), never forming an
+              m×n object in either pass
+============  =========================================================
+
+Gradient quality is gated on *convergence*: Danskin's theorem holds at
+a stationary point of the objective over the polytope, which the prox /
+mirror-descent iterations reach but generous iteration budgets are
+needed to reach it tightly (an unconverged solve yields a biased
+gradient — see the budget guidance in EXPERIMENTS.md). ``reg="ent"``
+fixed points are stationary for the *entropic* objective, so gradients
+of the reported plug-in value carry an O(ε) bias there; prefer the
+default ``reg="prox"`` when training.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.geometry import Geometry
+from repro.api.problem import QuadraticProblem
+from repro.core.gw import dense_cost
+
+__all__ = ["gw_loss", "fgw_loss", "quadratic_loss"]
+
+
+def _uniform(k: int, like) -> jnp.ndarray:
+    dtype = jnp.result_type(like) if like is not None else jnp.float32
+    return jnp.full((k,), 1.0 / k, dtype)
+
+
+def _as_geometry(arr_or_geom, weights=None, features=None) -> Geometry:
+    """Points array → point-cloud Geometry; Geometry passes through."""
+    if isinstance(arr_or_geom, Geometry):
+        return arr_or_geom
+    pts = jnp.asarray(arr_or_geom)
+    if pts.ndim != 2:
+        raise ValueError(
+            f"expected an (n, d) point cloud or a Geometry, got shape "
+            f"{pts.shape}")
+    w = _uniform(pts.shape[0], pts) if weights is None else weights
+    return Geometry.from_points(pts, w, features=features, validate=False)
+
+
+def quadratic_loss(problem: QuadraticProblem,
+                   solver: Union[str, object, None] = None,
+                   key: Optional[jax.Array] = None, *,
+                   marginal_grads: bool = False):
+    """Differentiable scalar GW value of a prebuilt problem.
+
+    The general entry point — ``gw_loss`` / ``fgw_loss`` build the
+    problem for you. ``solver`` follows :func:`repro.solve` semantics
+    (config instance, registry name, or None for auto-selection).
+
+    marginal_grads — attach *balanced* marginal gradients by adding a
+    primal-zero dual correction (the value is unchanged; gradients
+    w.r.t. the weight vectors become dual potentials of the linearized
+    problem, recovered by a coupling-weighted least squares on
+    ∇F(T*) ≈ f ⊕ g). Dense prox solves only; for unbalanced problems
+    marginal gradients flow through the KL penalty terms automatically
+    (and exactly) and this flag must stay False.
+
+    **Caveat (balanced only).** The recovery is exact when the
+    converged coupling is strictly interior (or its support is
+    connected and stable under the perturbation). Prox fixed points of
+    near-isometric problems are permutation-like — there a zero-sum
+    reweighting forces the *support itself* to move, the computed
+    value's sensitivity is budget-dependent, and no local recovery
+    reproduces finite differences (measured here; see DESIGN.md §11).
+    Treat the result as a descent *certificate direction*, or switch to
+    an unbalanced formulation (``lam``) whose marginal gradients are
+    exact. Gradients are meaningful for zero-sum perturbations only —
+    the tangent space of the probability simplex.
+    """
+    from repro.api.solve import select_solver, solve
+    from repro.api.solvers import DenseGWSolver, get_solver
+
+    if solver is None:
+        solver = select_solver(problem)
+    elif isinstance(solver, str):
+        solver = get_solver(solver).default_config(max(problem.shape))
+    out = solve(problem, solver, key, validate=False)
+    value = out.value
+    if marginal_grads:
+        if problem.is_unbalanced:
+            raise ValueError(
+                "marginal_grads=True is for balanced problems; unbalanced "
+                "marginal gradients already flow through the KL penalties")
+        if not isinstance(solver, DenseGWSolver) or solver.reg != "prox":
+            raise ValueError(
+                "marginal_grads=True needs a dense prox solve (the dual "
+                "recovery reads the full coupling at a true stationary "
+                f"point); got {type(solver).__name__}"
+                f"(reg={getattr(solver, 'reg', None)!r})")
+        value = value + _marginal_dual_correction(problem, out.coupling)
+    return value
+
+
+def _marginal_dual_correction(problem: QuadraticProblem, T,
+                              sweeps: int = 100):
+    """Primal-zero term whose gradient w.r.t. (a, b) is the dual pair.
+
+    At an exact prox fixed point the objective gradient ``A = ∇F(T*)``
+    satisfies ``A_ij = f_i + g_j`` on the *settled* support of T* (the
+    kernel exponent of the self-consistent Sinkhorn projection is a
+    rank-one sum there; entries still sliding to zero never settle and
+    obey an inequality instead). The potentials are therefore recovered
+    by coupling-weighted least squares
+
+        min_{f, g}  Σ_ij T*_ij (A_ij − f_i − g_j)²
+
+    via its alternating normal equations (each sweep is two weighted
+    row/column averages — a Laplacian Jacobi pass that converges
+    geometrically for connected supports). The envelope theorem then
+    gives dV/da = f, dV/db = g along zero-sum directions, and the
+    correction ⟨f, a − sg(a)⟩ + ⟨g, b − sg(b)⟩ is exactly zero in the
+    primal while injecting those gradients. Exactness caveats:
+    :func:`quadratic_loss`.
+    """
+    sg = jax.lax.stop_gradient
+    a, b = problem.geom_x.weights, problem.geom_y.weights
+    Cx = problem.geom_x.cost_matrix
+    Cy = problem.geom_y.cost_matrix
+    A = 2.0 * dense_cost(Cx, Cy, T, problem.loss)
+    if problem.is_fused:
+        alpha = problem.fused_penalty
+        A = alpha * A + (1.0 - alpha) * problem.linear_cost_dense()
+    A, T = sg(A), sg(T)
+    mu = jnp.maximum(T.sum(axis=1), 1e-30)
+    nu = jnp.maximum(T.sum(axis=0), 1e-30)
+    TA = T * A
+
+    def sweep(_, fg):
+        f, g = fg
+        f = (TA.sum(axis=1) - T @ g) / mu
+        g = (TA.sum(axis=0) - T.T @ f) / nu
+        return f, g
+
+    f, g = jax.lax.fori_loop(0, sweeps, sweep,
+                             (jnp.zeros_like(mu), jnp.zeros_like(nu)))
+    # gauge fix: split the shared constant evenly (irrelevant for
+    # zero-sum tangents, keeps the pair symmetric for inspection)
+    s = 0.5 * (f @ sg(jnp.asarray(a) / jnp.sum(a)) -
+               g @ sg(jnp.asarray(b) / jnp.sum(b)))
+    return (jnp.sum((f - s) * (a - sg(a)))
+            + jnp.sum((g + s) * (b - sg(b))))
+
+
+def gw_loss(x, y, a=None, b=None, *, loss: str = "l2",
+            solver: Union[str, object, None] = None,
+            key: Optional[jax.Array] = None,
+            marginal_grads: bool = False):
+    """GW distance between two spaces as a differentiable loss.
+
+    x, y — (m, d) / (n, d') point clouds (gradients flow into the
+    coordinates) or :class:`Geometry` instances (gradients flow into
+    whatever inexact leaves they carry, e.g. a precomputed cost matrix)
+    a, b — optional marginals (uniform when omitted)
+
+    Example — embed a graph so its metric matches a target shape::
+
+        def objective(params):
+            z = model.apply(params, node_feats)          # (n, d) embed
+            return gw_loss(z, target_points, solver="dense_gw")
+        grads = jax.grad(objective)(params)
+    """
+    problem = QuadraticProblem(_as_geometry(x, a), _as_geometry(y, b),
+                               loss=loss, validate=False)
+    return quadratic_loss(problem, solver, key,
+                          marginal_grads=marginal_grads)
+
+
+def fgw_loss(x, y, fx=None, fy=None, M=None, *, fused_penalty: Any = 0.5,
+             a=None, b=None, loss: str = "l2",
+             solver: Union[str, object, None] = None,
+             key: Optional[jax.Array] = None,
+             marginal_grads: bool = False):
+    """Fused GW loss: ``α·⟨L⊗T, T⟩ + (1−α)·⟨M, T⟩``, differentiable in
+    the structures (x, y), the features (fx, fy) / explicit ``M``, and
+    α itself (``fused_penalty`` may be a traced scalar).
+
+    Give either node features ``fx``/``fy`` (M becomes their pairwise
+    squared distance — the learned-ground-cost hook: make fx the output
+    of a model and differentiate through it) or an explicit ``M``.
+    """
+    if (fx is None) != (fy is None):
+        raise ValueError("fgw_loss needs features on both sides or neither")
+    if fx is None and M is None:
+        raise ValueError(
+            "fgw_loss needs a linear term: pass fx/fy features or M")
+    problem = QuadraticProblem(_as_geometry(x, a, features=fx),
+                               _as_geometry(y, b, features=fy),
+                               loss=loss, fused_penalty=fused_penalty,
+                               M=M, validate=False)
+    return quadratic_loss(problem, solver, key,
+                          marginal_grads=marginal_grads)

@@ -32,6 +32,7 @@ from repro.api.solvers import _require_key, register_solver
 from repro.lowrank.dykstra import lr_dykstra
 from repro.lowrank.factorize import factor_ground
 from repro.lowrank.gradients import gw_lr_gradients, gw_lr_value
+from repro.lowrank.init import anchor_init, random_init
 
 # floor for log(max(·, _TINY)) kernels: must be a *normal* float32 — XLA
 # CPU flushes subnormals, so 1e-38 would give log(0) = -inf and
@@ -52,23 +53,9 @@ def _auto_cost_rank(m: int, n: int) -> int:
     return min(min(m, n), 32)
 
 
-def _init_factors(key, a, b, rank: int):
-    """Random full-rank positive init with exact outer marginals.
-
-    A rank-one init (Q = a gᵀ) is a *fixed point* of the mirror-descent
-    kernels — every gradient column coincides, so the factors stay
-    rank-one forever. The init must therefore break column symmetry;
-    Dykstra restores the inner-marginal constraints on the first step.
-    """
-    kq, kr = jax.random.split(key)
-    g = jnp.full((rank,), 1.0 / rank, a.dtype)
-    zq = jax.random.uniform(kq, (a.shape[0], rank), a.dtype,
-                            minval=0.5, maxval=1.5)
-    zr = jax.random.uniform(kr, (b.shape[0], rank), b.dtype,
-                            minval=0.5, maxval=1.5)
-    Q = a[:, None] * zq / zq.sum(axis=1, keepdims=True)
-    R = b[:, None] * zr / zr.sum(axis=1, keepdims=True)
-    return Q, R, g
+# the historical random init now lives in lowrank/init.py (random_init)
+# alongside the FPS/anchor-seeded structured init (anchor_init)
+_init_factors = random_init
 
 
 @dataclass(frozen=True)
@@ -87,6 +74,12 @@ class LowRankGWSolver:
                     the kernel exponents bounded by ±gamma)
     g_floor       — lower bound α on the inner marginal g (rank-collapse
                     guard inside Dykstra)
+    init          — factor initialization: "anchors" (default — FPS
+                    anchor compression + r×r anchor GW, lifted to
+                    feasible factors; lowrank/init.py) or "random" (the
+                    historical symmetric-broken random init)
+    init_blend    — uniform-coupling fraction τ mixed into the anchors
+                    init (keeps every factor entry positive)
     outer_iters   — mirror-descent step budget
     inner_iters   — Dykstra budget per mirror step
     tol           — outer stop: relative ℓ1 change of (Q, R, g)
@@ -106,6 +99,8 @@ class LowRankGWSolver:
     gamma: Any = 10.0
     gamma_rescale: bool = True
     g_floor: float = 1e-10
+    init: str = "anchors"
+    init_blend: float = 0.2
     outer_iters: int = 300
     inner_iters: int = 200
     tol: float = 1e-6
@@ -143,7 +138,14 @@ class LowRankGWSolver:
                            key_fx)
         fy = factor_ground(problem.geom_y, problem.loss, "y", cost_rank,
                            key_fy)
-        state0 = _init_factors(key_init, a, b, rank)
+        if self.init == "anchors":
+            state0 = anchor_init(key_init, problem, rank,
+                                 blend=self.init_blend)
+        elif self.init == "random":
+            state0 = random_init(key_init, a, b, rank)
+        else:
+            raise ValueError(f"unknown init {self.init!r} "
+                             f"(known: anchors, random)")
 
         step = partial(self._md_step, a=a, b=b, hx=fx.h, hy=fy.h)
 
@@ -213,6 +215,7 @@ register_pytree_dataclass(
     LowRankGWSolver,
     data_fields=("epsilon", "gamma", "fault"),
     meta_fields=("rank", "cost_rank", "gamma_rescale", "g_floor",
-                 "outer_iters", "inner_iters", "tol", "inner_tol",
-                 "max_rescues", "rescue_factor", "trace"))
+                 "init", "init_blend", "outer_iters", "inner_iters",
+                 "tol", "inner_tol", "max_rescues", "rescue_factor",
+                 "trace"))
 register_solver("lowrank_gw")(LowRankGWSolver)

@@ -56,6 +56,37 @@ def farthest_point_sampling(key, D, weights, k: int):
     return idx
 
 
+def fps_points(key, points, weights, k: int):
+    """Coordinate-space farthest-point sampling — O(n·k·d), no cost
+    matrix. Same contract as :func:`farthest_point_sampling` (random
+    weighted start, greedy max-min squared-euclidean), for callers that
+    must never materialize the n×n cost — e.g. the low-rank solver's
+    anchor-seeded init (lowrank/init.py). Returns (indices (k,) int32,
+    assign (n,) int32 nearest-anchor partition)."""
+    n = points.shape[0]
+    start = jax.random.categorical(key, jnp.log(jnp.maximum(weights, 1e-38)))
+
+    def d2(j):
+        return jnp.sum((points - points[j]) ** 2, axis=-1)
+
+    idx0 = jnp.zeros((k,), jnp.int32).at[0].set(start.astype(jnp.int32))
+    mind0 = d2(start).at[start].set(-jnp.inf)
+    assign0 = jnp.zeros((n,), jnp.int32)
+
+    def body(i, state):
+        idx, mind, assign = state
+        nxt = jnp.argmax(mind).astype(jnp.int32)
+        dn = d2(nxt)
+        assign = jnp.where(dn < mind, i, assign)   # -inf slots keep owner
+        mind = jnp.minimum(mind, dn).at[nxt].set(-jnp.inf)
+        return idx.at[i].set(nxt), mind, assign
+
+    idx, _, assign = lax.fori_loop(1, k, body, (idx0, mind0, assign0))
+    # chosen anchors' own slots were frozen at -inf; pin them to themselves
+    assign = assign.at[idx].set(jnp.arange(k, dtype=jnp.int32))
+    return idx, assign
+
+
 def medoid_refinement(D, weights, indices, iters: int):
     """Weighted Lloyd/k-medoids rounds on the cost matrix.
 

@@ -24,12 +24,18 @@ from repro.serve.batching import (
 )
 from repro.serve.cache import GeometryCache
 from repro.serve.metrics import ServeMetrics, percentiles
-from repro.serve.server import GWServer, RequestResult, ServeConfig
+from repro.serve.server import (
+    GWServer,
+    RequestResult,
+    ServeConfig,
+    enable_compilation_cache,
+)
 
 __all__ = [
     "GWServer",
     "ServeConfig",
     "RequestResult",
+    "enable_compilation_cache",
     "GeometryCache",
     "ServeMetrics",
     "percentiles",

@@ -87,6 +87,16 @@ class ServeConfig:
     donate        — donate the stacked problem buffers to the executor
                     (they are per-flush temporaries; donation lets XLA
                     reuse them for outputs)
+    compilation_cache_dir — when set, enable JAX's *persistent*
+                    compilation cache at this path before the first
+                    dispatch: a fresh process serving the same bucket
+                    shapes deserializes yesterday's executables instead
+                    of recompiling them (the dominant cold-start cost).
+                    The knob is process-global (it flips ``jax.config``
+                    for every jit in the process, not just the server's)
+                    and sticky — enabling is one-way for the process
+                    lifetime, later servers may point elsewhere only
+                    with a fresh process.
     """
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     max_batch: int = 8
@@ -95,6 +105,7 @@ class ServeConfig:
     cache_entries: int = 128
     on_failure: str = "fallback"
     donate: bool = True
+    compilation_cache_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.on_failure not in ("none", "fallback"):
@@ -103,6 +114,20 @@ class ServeConfig:
                 f"{self.on_failure!r}")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+
+
+def enable_compilation_cache(cache_dir: str) -> None:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    Caches every XLA executable compiled from now on (and reloads on
+    cache hits in future processes). The thresholds are zeroed so even
+    sub-second solver compiles are persisted — a GW serving process
+    compiles a handful of large executables, not thousands of tiny
+    ones, so write amplification is a non-issue.
+    """
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
 
 
 @dataclass
@@ -185,6 +210,8 @@ class GWServer:
 
     def __init__(self, config: Optional[ServeConfig] = None):
         self.config = config or ServeConfig()
+        if self.config.compilation_cache_dir:
+            enable_compilation_cache(self.config.compilation_cache_dir)
         self.cache = GeometryCache(self.config.cache_entries)
         self.metrics = ServeMetrics()
         self._requests: Dict[int, _Request] = {}

@@ -438,3 +438,58 @@ def test_keyless_dense_fallback_returns_batched_output():
     res = srv.result(srv.submit(_problem(0, 14), persistent))
     assert res.failed and not res.fell_back
     assert res.status_name == "DIVERGED"
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache
+# ---------------------------------------------------------------------------
+
+def test_compilation_cache_skips_recompile_in_fresh_process(tmp_path):
+    """Two identical server processes sharing a cache dir: the first
+    populates it, the second (fresh process, cold in-memory caches)
+    deserializes every executable — no new cache entries."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import sys
+        import jax, jax.numpy as jnp
+        import repro
+        from repro.serve import GWServer, ServeConfig
+
+        server = GWServer(ServeConfig(compilation_cache_dir=sys.argv[1],
+                                      max_batch=1))
+        n = 20
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, 2))
+        y = jax.random.normal(jax.random.PRNGKey(1), (n, 2))
+        a = jnp.ones(n) / n
+        p = repro.QuadraticProblem(repro.Geometry.from_points(x, a),
+                                   repro.Geometry.from_points(y, a))
+        solver = repro.DenseGWSolver(outer_iters=5, inner_iters=10)
+        res = server.result(server.submit(p, solver))
+        assert not res.failed, res.status_name
+        print("VALUE", float(res.value))
+    """)
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = {**os.environ, "PYTHONPATH": str(root / "src"),
+           "PYTHONHASHSEED": "0"}
+
+    def run_once():
+        proc = subprocess.run(
+            [sys.executable, "-c", code, str(tmp_path)],
+            capture_output=True, text=True, env=env, cwd=root, timeout=420)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        value = [ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("VALUE")][0]
+        entries = sorted(p.name for p in tmp_path.rglob("*") if p.is_file())
+        return value, entries
+
+    value1, entries1 = run_once()
+    assert entries1, "first run persisted no executables"
+    value2, entries2 = run_once()
+    assert value2 == value1
+    assert entries2 == entries1, (
+        f"second process recompiled: {set(entries2) - set(entries1)}")
